@@ -1,0 +1,43 @@
+"""Communication cost: uplink bytes per round per strategy arm, at the
+simulation scale AND projected to every assigned full-size backbone
+(trainable LoRA+adapter payload, fp32 vs int8 vs int4/NF4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.fl_common import save
+from repro.configs import ARCHS, get_config
+from repro.core.quant import quantize_tree, tree_bytes
+from repro.models import build_model
+from repro.models.model import _lora_layer_specs  # trainable spec source
+from repro.core import adapter as adapter_lib
+
+
+def _trainable_bytes(arch: str) -> dict:
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    specs = model.param_specs()["trainable"]
+    fp32 = sum(int(jnp.prod(jnp.asarray(l.shape))) * 4
+               for l in jax.tree.leaves(specs))
+    # quantized payload sizes computed on a structurally identical tree
+    zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.float32), specs)
+    q8 = tree_bytes(quantize_tree(zeros, bits=8, block=64, min_size=256,
+                                  skip_names=("slot",)))
+    q4 = tree_bytes(quantize_tree(zeros, bits=4, block=64, min_size=256,
+                                  skip_names=("slot",)))
+    backbone = cfg.param_count() * 2  # bf16 — what naive FL would ship
+    return {"fp32": fp32, "int8": q8, "int4": q4, "backbone_bf16": backbone}
+
+
+def run() -> list[str]:
+    rows, out = [], {}
+    for arch in ARCHS:
+        b = _trainable_bytes(arch)
+        out[arch] = b
+        rows.append(
+            f"comm/{arch}/uplink_int8,{b['int8']/1e3:.0f},"
+            f"fp32={b['fp32']/2**20:.1f}MiB;int4={b['int4']/2**20:.1f}MiB;"
+            f"vs_backbone={b['backbone_bf16']/max(b['int8'],1):.0f}x")
+    save("comm_cost", out)
+    return rows

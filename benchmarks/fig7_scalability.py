@@ -1,0 +1,18 @@
+"""Fig. 7: TriplePlay scalability — 5 vs 10 FL clients (PACS)."""
+from __future__ import annotations
+
+from benchmarks.fl_common import fl_config, hist_dict, save
+from repro.fl.simulator import run_federated
+
+
+def run() -> list[str]:
+    rows, out = [], {}
+    for n in (5, 10):
+        h = run_federated(fl_config("pacs", "tripleplay", n_clients=n,
+                                    n_per_class=48))
+        out[f"clients_{n}"] = hist_dict(h)
+        rows.append(f"fig7/clients{n}/final_acc,"
+                    f"{h.server_acc[-1]*1e6:.0f},"
+                    f"final_loss={h.server_loss[-1]:.3f}")
+    save("fig7_scalability", out)
+    return rows

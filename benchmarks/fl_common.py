@@ -1,0 +1,46 @@
+"""Shared config/scaling for the federated benchmarks (Figs. 3-7).
+
+REPRO_BENCH_SCALE=quick (default) runs CPU-sized rounds; =paper runs the
+500-round protocol of the paper (hours on this container).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+
+from repro.fl.simulator import FLConfig
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
+
+PRESET = {
+    "quick": dict(rounds=12, local_steps=6, n_per_class=32,
+                  gan_steps=250, eval_every=1),
+    "paper": dict(rounds=500, local_steps=10, n_per_class=60,
+                  gan_steps=600, eval_every=10),
+}[SCALE]
+
+
+def fl_config(dataset: str, strategy: str, n_clients: int = 5,
+              **kw) -> FLConfig:
+    base = dict(PRESET)
+    base.update(kw)
+    return FLConfig(dataset=dataset, strategy=strategy,
+                    n_clients=n_clients, lr=3e-3, **base)
+
+
+def save(name: str, payload) -> None:
+    with open(RESULTS / f"{name}.json", "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def hist_dict(h) -> dict:
+    return {"rounds": h.rounds, "server_acc": h.server_acc,
+            "tail_acc": h.tail_acc,
+            "server_loss": h.server_loss, "client_loss": h.client_loss,
+            "client_acc": h.client_acc, "uplink_bytes": h.uplink_bytes,
+            "round_time_s": h.round_time_s, "util_proxy": h.util_proxy,
+            "meta": h.meta}

@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python
+— not performance-representative), so wall-clock is measured on the jnp
+reference path (the dry-run execution path) and the Pallas kernels are
+timed in interpret mode only for regression tracking. The TPU-relevant
+numbers are the analytic VMEM/MXU tile schedules reported as `derived`.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as qlib
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.RandomState(0)
+    # flash attention ref path (B, S, H, D)
+    for S in (512, 2048):
+        q = jnp.asarray(rng.randn(2, S, 8, 64), jnp.float32)
+        k = jnp.asarray(rng.randn(2, S, 2, 64), jnp.float32)
+        f = jax.jit(lambda q, k: ref.flash_attention(q, k, k, causal=True))
+        t = _time(f, q, k)
+        flops = 4 * 2 * 8 * S * S * 64 / 2
+        rows.append(f"kernel/flash_ref/S{S},{t*1e6:.0f},"
+                    f"gflops={flops/t/1e9:.1f}")
+    # quant matmul ref vs dense
+    x = jnp.asarray(rng.randn(512, 1024), jnp.float32)
+    w = jnp.asarray(rng.randn(1024, 1024), jnp.float32)
+    for bits, mode in ((8, "linear"), (4, "nf4")):
+        qt = qlib.quantize(w, bits=bits, block=128, mode=mode)
+        f = jax.jit(lambda x, qt=qt: ref.quant_matmul(x, qt))
+        t = _time(f, x)
+        dense_t = _time(jax.jit(lambda x: x @ w), x)
+        rows.append(f"kernel/qmm_ref/{mode}{bits},{t*1e6:.0f},"
+                    f"dense_us={dense_t*1e6:.0f};"
+                    f"bytes_saved={1 - (qt.nbytes_packed() / w.nbytes):.2f}")
+    # blockwise quant
+    g = jnp.asarray(rng.randn(4096, 512), jnp.float32)
+    f = jax.jit(lambda g: jax.tree.leaves(qlib.quantize(g, bits=8,
+                                                        block=128))[0])
+    rows.append(f"kernel/blockwise_quant,{_time(f, g)*1e6:.0f},"
+                f"tensor=4096x512")
+    # selective scan (oracle path — the CPU execution path of the model)
+    B, S, di, N = 2, 512, 128, 16
+    dt = jnp.asarray(np.abs(rng.randn(B, S, di)) * 0.1, jnp.float32)
+    x = jnp.asarray(rng.randn(B, S, di), jnp.float32)
+    Bm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    Cm = jnp.asarray(rng.randn(B, S, N), jnp.float32)
+    A = jnp.asarray(-np.abs(rng.randn(di, N)), jnp.float32)
+    f = jax.jit(lambda *a: ref.selective_scan(*a)[0])
+    t = _time(f, dt, x, Bm, Cm, A)
+    rows.append(f"kernel/selective_scan_ref,{t*1e6:.0f},"
+                f"elems={B*S*di*N};Mstate_upd_per_s="
+                f"{B*S*di*N/t/1e6:.0f}")
+    return rows

@@ -1,0 +1,113 @@
+"""§Perf hillclimbing driver (deliverable g/h).
+
+Runs named experiment variants of the three hillclimb pairs through the
+dry-run + calibrated-cost machinery and appends records (tagged with the
+experiment name and hypothesis) to perf_iterations.jsonl. EXPERIMENTS.md
+§Perf narrates the resulting before/after table.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations          # all
+  PYTHONPATH=src python -m benchmarks.perf_iterations --only A
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_one
+
+# experiment registry: (pair, name, hypothesis, arch, shape, kwargs)
+EXPERIMENTS = [
+    # --- Pair A: yi-9b × train_4k (paper-representative federated QLoRA)
+    ("A", "A0-baseline-bf16",
+     "bf16 backbone + f32 trainables (FedCLIP-style arm)",
+     "yi-9b", "train_4k", {}),
+    ("A", "A1-qlora-nf4",
+     "paper-faithful QLoRA: NF4 backbone cuts weight reads/storage 4x; "
+     "memory term drops a little (activations dominate), HBM headroom up",
+     "yi-9b", "train_4k", dict(quant_bits=4, quant_mode="nf4")),
+    ("A", "A2-qlora-bf16-trainables",
+     "f32 LoRA/adapter promote several GB of collectives to f32; bf16 "
+     "trainables should halve the collective term's big members",
+     "yi-9b", "train_4k", dict(quant_bits=4, quant_mode="nf4",
+                               trainable_dtype="bfloat16")),
+    ("A", "A3-plus-grad-accum4",
+     "4 microbatches cut activation working set ~4x (temp -> fits HBM); "
+     "HBM traffic roughly unchanged, weights re-read 4x (cheap in NF4)",
+     "yi-9b", "train_4k", dict(quant_bits=4, quant_mode="nf4",
+                               trainable_dtype="bfloat16", grad_accum=4)),
+    # --- Pair B: kimi-k2 × train_4k (worst roofline fraction)
+    ("B", "B0-baseline-bf16",
+     "bf16 1T MoE: per-expert FSDP weight gathers dominate collectives; "
+     "84.6 GiB/device is far over HBM",
+     "kimi-k2-1t-a32b", "train_4k", {}),
+    ("B", "B1-int4-experts",
+     "int4 expert storage: the FSDP all-gather moves the packed int4 "
+     "payload -> collective bytes / ~4, resident weights 7.7 -> 1.9 GiB",
+     "kimi-k2-1t-a32b", "train_4k", dict(quant_bits=4)),
+    ("B", "B2-plus-grad-accum4",
+     "4 microbatches cut the dispatch/activation transients ~4x -> "
+     "temp memory toward HBM budget; collectives re-run 4x smaller each",
+     "kimi-k2-1t-a32b", "train_4k", dict(quant_bits=4, grad_accum=4)),
+    ("B", "B3-plus-bf16-trainables",
+     "same f32->bf16 collective halving as A2 on the attention/adapter "
+     "paths",
+     "kimi-k2-1t-a32b", "train_4k",
+     dict(quant_bits=4, grad_accum=4, trainable_dtype="bfloat16")),
+    # --- Pair C: kimi-k2 × decode_32k (most collective-bound)
+    ("C", "C0-baseline-bf16",
+     "decode gathers FULL expert weights per layer for ~8 tokens/device "
+     "— collective-crushed (4.8 s/step roofline)",
+     "kimi-k2-1t-a32b", "decode_32k", {}),
+    ("C", "C1-int4-experts",
+     "int4 experts: weight gathers shrink ~4x (gather happens on packed "
+     "payload, dequant after)",
+     "kimi-k2-1t-a32b", "decode_32k", dict(quant_bits=4)),
+    ("C", "C2-plus-int8-kv",
+     "int8 KV cache halves the resident cache and its read traffic "
+     "(paper-aligned quantization applied to serving state)",
+     "kimi-k2-1t-a32b", "decode_32k", dict(quant_bits=4, kv_quant=8)),
+    # --- Pair B round 2 (after B1-B3 measurements)
+    ("B2x", "B4-int8-dispatch",
+     "MoE all-to-all payloads ride in int8 (per-row scales, custom-VJP "
+     "so cotangents are also int8) — DeepSeek-V3-style; expect the "
+     "all-to-all share of the collective term to halve",
+     "kimi-k2-1t-a32b", "train_4k",
+     dict(quant_bits=4, grad_accum=4,
+          extra_cfg={"moe_dispatch_bits": 8})),
+    ("B2x", "B5-accum16",
+     "39.9 GiB/device is still 2.5x HBM; 16 microbatches shrink the "
+     "dispatch/activation transients linearly",
+     "kimi-k2-1t-a32b", "train_4k",
+     dict(quant_bits=4, grad_accum=16,
+          extra_cfg={"moe_dispatch_bits": 8})),
+    ("C2x", "C3-int8-dispatch-decode",
+     "int8 dispatch on the decode path too (collective no longer "
+     "dominant; expect a small further drop)",
+     "kimi-k2-1t-a32b", "decode_32k",
+     dict(quant_bits=4, kv_quant=8,
+          extra_cfg={"moe_dispatch_bits": 8})),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--out", default="perf_iterations.jsonl")
+    args = ap.parse_args()
+    for pair, name, hyp, arch, shape, kw in EXPERIMENTS:
+        if args.only and pair not in args.only.split(","):
+            continue
+        print(f"\n### {name}: {hyp}", flush=True)
+        try:
+            rec = run_one(arch, shape, multi_pod=False, **kw)
+            rec.update({"experiment": name, "pair": pair,
+                        "hypothesis": hyp})
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        except Exception as e:  # noqa: BLE001
+            print(f"!! {name} failed: {e!r}"[:400], flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Roofline analysis over the dry-run sweep (deliverable g).
+
+Reads the jsonl records produced by ``repro.launch.dryrun`` and derives,
+per (arch × shape × mesh):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = Σ_ops ring_factor(op) · bytes_per_device / link_bw
+
+with TPU v5e constants (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+cost_analysis FLOPs/bytes are per-device for SPMD executables; collective
+bytes are parsed from the partitioned HLO (output-buffer sizes), converted
+to wire traffic with standard ring factors:
+
+  all-gather       (n-1)/n · out_bytes      (received)
+  reduce-scatter   (n-1)   · out_bytes      (out is the scattered shard)
+  all-reduce       2(n-1)/n · bytes
+  all-to-all       (n-1)/n · bytes
+  collective-permute  1 · bytes
+
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params,
+D = tokens — the useful-work yardstick against compiled HLO FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+
+RING = {"all-gather": lambda n: (n - 1) / max(n, 1),
+        "reduce-scatter": lambda n: (n - 1),
+        "all-reduce": lambda n: 2 * (n - 1) / max(n, 1),
+        "all-to-all": lambda n: (n - 1) / max(n, 1),
+        "collective-permute": lambda n: 1.0}
+
+
+def model_flops(rec) -> float:
+    n_act = rec["params_active"]
+    tokens = rec["global_batch"] * (
+        rec["seq_len"] if rec["kind"] in ("train", "prefill") else 1)
+    mult = 6 if rec["kind"] == "train" else 2
+    return mult * n_act * tokens
+
+
+def terms(rec) -> dict:
+    """Prefers the loop-calibrated costs (see launch/dryrun.py); the raw
+    scanned-graph numbers undercount loop bodies. 'bytes accessed' counts
+    every operand/result, so the memory term is a conservative upper bound
+    on HBM traffic (fusion reduces it on real hardware)."""
+    n_dev = rec["n_devices"]
+    flops = rec.get("hlo_flops_cal", rec["hlo_flops"])
+    nbytes = rec.get("hlo_bytes_cal", rec["hlo_bytes"])
+    colls = rec.get("collectives_cal", rec["collectives"])
+    compute = flops / PEAK_FLOPS
+    memory = nbytes / HBM_BW
+    coll = 0.0
+    for kind, v in colls.items():
+        n = max(v.get("gsize", 0), 2)
+        coll += RING[kind](n) * v["bytes"] / LINK_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", coll), key=lambda t: t[1])
+    mf = model_flops(rec)
+    hlo_global = flops * n_dev
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": coll, "dominant": dom[0],
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+            "hbm_gib": (rec["argument_bytes"] + rec["output_bytes"] +
+                        rec["temp_bytes"]) / 2**30}
+
+
+def load(path: str):
+    with open(path) as f:
+        return [json.loads(l) for l in f]
+
+
+def table(records, mesh="16x16") -> str:
+    rows = []
+    head = (f"| arch | shape | compute s | memory s | collective s | "
+            f"dominant | 6ND/HLO |")
+    sep = "|---" * 7 + "|"
+    for r in records:
+        if r["mesh"] != mesh:
+            continue
+        t = terms(r)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"**{t['dominant']}** | {t['useful_ratio']:.2f} |")
+    return "\n".join([head, sep] + rows)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_baseline.jsonl"
+    recs = load(path)
+    print(table(recs, "16x16"))
+    print()
+    print("name,us_per_call,derived")
+    for r in recs:
+        t = terms(r)
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+              f"{bound*1e6:.1f},dominant={t['dominant']};"
+              f"useful={t['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark harness — one module per paper table/figure plus the roofline
+and kernel microbenches. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run                 # quick scale
+  REPRO_BENCH_SCALE=paper PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run --only fig4,comm
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+import traceback
+
+BENCHES = ("kernel", "comm", "roofline", "fig3", "fig4", "fig5", "fig6",
+           "fig7")
+
+
+def _roofline_rows() -> list[str]:
+    from benchmarks import roofline
+    path = pathlib.Path("dryrun_baseline.jsonl")
+    if not path.exists():
+        return ["roofline/missing,0,run repro.launch.dryrun --all first"]
+    recs = roofline.load(str(path))
+    rows = []
+    for r in recs:
+        t = roofline.terms(r)
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        rows.append(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{bound*1e6:.1f},dominant={t['dominant']};"
+            f"useful={t['useful_ratio']:.2f};hbm={t['hbm_gib']:.1f}GiB")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list from: " + ",".join(BENCHES))
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else set(BENCHES)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in BENCHES:
+        if name not in want:
+            continue
+        t0 = time.time()
+        try:
+            if name == "kernel":
+                from benchmarks.kernel_bench import run
+            elif name == "comm":
+                from benchmarks.comm_cost import run
+            elif name == "roofline":
+                run = _roofline_rows
+            elif name == "fig3":
+                from benchmarks.fig3_resource import run
+            elif name == "fig4":
+                from benchmarks.fig4_pacs import run
+            elif name == "fig5":
+                from benchmarks.fig5_officehome import run
+            elif name == "fig6":
+                from benchmarks.fig6_clients import run
+            elif name == "fig7":
+                from benchmarks.fig7_scalability import run
+            for row in run():
+                print(row, flush=True)
+            print(f"# {name} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end TriplePlay federated training (the paper's main pipeline).
+
+Frozen NF4 CLIP backbone + attention adapter + LoRA per client, client-side
+conditional GANs rebalancing the long-tail class, quantized updates
+aggregated by sample-count weighting — compared against the FedCLIP and
+QLoRA-no-GAN arms.
+
+  PYTHONPATH=src python examples/fl_tripleplay.py --rounds 12 --clients 5
+  PYTHONPATH=src python examples/fl_tripleplay.py --strategy fedclip
+"""
+import argparse
+
+import numpy as np
+
+from repro.fl.simulator import FLConfig, run_federated
+
+
+def ascii_curve(vals, width=48, height=8):
+    lo, hi = min(vals), max(vals) + 1e-9
+    grid = [[" "] * width for _ in range(height)]
+    for i, v in enumerate(vals):
+        x = int(i / max(len(vals) - 1, 1) * (width - 1))
+        y = int((v - lo) / (hi - lo) * (height - 1))
+        grid[height - 1 - y][x] = "*"
+    return "\n".join("".join(r) for r in grid) + \
+        f"\n[{lo:.3f} .. {hi:.3f}]"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="tripleplay",
+                    choices=["fedclip", "qlora_nogan", "tripleplay"])
+    ap.add_argument("--dataset", default="pacs",
+                    choices=["pacs", "officehome"])
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=5)
+    ap.add_argument("--local-steps", type=int, default=6)
+    ap.add_argument("--gan-steps", type=int, default=250)
+    ap.add_argument("--n-per-class", type=int, default=32)
+    args = ap.parse_args()
+
+    h = run_federated(FLConfig(
+        dataset=args.dataset, strategy=args.strategy,
+        n_clients=args.clients, rounds=args.rounds,
+        local_steps=args.local_steps, gan_steps=args.gan_steps,
+        n_per_class=args.n_per_class, lr=3e-3))
+    print(f"\n=== {args.strategy} on {args.dataset} ===")
+    print(f"trainable params: {h.meta['trainable_params']:,} "
+          f"(backbone {h.meta['frozen_params']:,} frozen, "
+          f"{h.meta['backbone_bytes']/2**20:.1f} MiB stored)")
+    print(f"uplink/round: {np.mean(h.uplink_bytes)/2**20:.2f} MiB")
+    print(f"server accuracy by round: "
+          f"{['%.3f' % a for a in h.server_acc]}")
+    print(ascii_curve(h.server_acc))
+    print(f"final: acc={h.server_acc[-1]:.3f} loss={h.server_loss[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

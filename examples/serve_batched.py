@@ -1,0 +1,10 @@
+"""Batched serving of a federated-fine-tuned backbone: prefill + ring-cache
+decode, optional NF4 backbone, across any assigned architecture.
+
+  PYTHONPATH=src python examples/serve_batched.py --arch h2o-danube-3-4b \
+      --batch 4 --gen 16 --quant 4
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

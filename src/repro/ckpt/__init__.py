@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (load_checkpoint, restore_fl_state,
+                                   save_checkpoint, save_fl_state)  # noqa

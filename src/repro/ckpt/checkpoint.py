@@ -1,0 +1,128 @@
+"""Checkpointing: param/optimizer/FL-round state to disk and back.
+
+Pure-numpy .npz container (no orbax offline) with a JSON manifest:
+- arbitrary pytrees of jax/np arrays, including quantized ``QTensor``
+  leaves (their payload/scales/metadata round-trip exactly — a QLoRA
+  backbone checkpoint stays int4/NF4 on disk);
+- atomic writes (tmp + rename), integrity check via per-leaf shapes;
+- FL server state = round counter + global trainables + per-client sample
+  counts, so a federated run resumes mid-protocol.
+
+Sharded arrays are pulled to host before saving (checkpoints are taken
+from the replicated trainable set in FL — the backbone is frozen and
+reproducible from seed+quantization, but can be checkpointed too).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.quant import QTensor
+
+_SEP = "/"
+_QMETA_KEYS = ("bits", "mode", "block", "orig_shape")
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    arrays: Dict[str, np.ndarray] = {}
+    meta: Dict[str, Any] = {"qtensors": {}, "dtypes": {}}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda l: isinstance(l, QTensor))
+    meta["treedef"] = str(treedef)
+    paths = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        paths.append(key)
+        if isinstance(leaf, QTensor):
+            arrays[key + ".q"] = np.asarray(leaf.q)
+            arrays[key + ".scales"] = np.asarray(leaf.scales)
+            meta["qtensors"][key] = {
+                "bits": leaf.bits, "mode": leaf.mode, "block": leaf.block,
+                "orig_shape": list(leaf.orig_shape),
+                "out_dtype": np.dtype(leaf.out_dtype).name}
+        else:
+            a = np.asarray(leaf)
+            arrays[key] = a
+            meta["dtypes"][key] = a.dtype.name
+    meta["paths"] = paths
+    return arrays, meta
+
+
+def save_checkpoint(path: str, tree, *, extra: dict | None = None) -> None:
+    """Atomically write ``tree`` (+ JSON-serializable ``extra``) to
+    ``path`` (a .npz file; a sibling .json holds the manifest)."""
+    arrays, meta = _flatten(tree)
+    if extra:
+        meta["extra"] = extra
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    mtmp = path + ".json.tmp"
+    with open(mtmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(mtmp, path + ".json")
+
+
+def load_checkpoint(path: str, like) -> Tuple[Any, dict]:
+    """Restore a tree with the same structure as ``like``.
+    Returns (tree, extra)."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    data = np.load(path)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        like, is_leaf=lambda l: isinstance(l, QTensor))
+    out = []
+    for path_keys, leaf in flat:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path_keys)
+        if isinstance(leaf, QTensor):
+            qm = meta["qtensors"][key]
+            out.append(QTensor(
+                q=jax.numpy.asarray(data[key + ".q"]),
+                scales=jax.numpy.asarray(data[key + ".scales"]),
+                bits=qm["bits"], mode=qm["mode"], block=qm["block"],
+                out_dtype=np.dtype(qm["out_dtype"]),
+                orig_shape=tuple(qm["orig_shape"])))
+        else:
+            a = data[key]
+            want = getattr(leaf, "shape", None)
+            if want is not None and tuple(a.shape) != tuple(want):
+                raise ValueError(
+                    f"checkpoint leaf {key}: shape {a.shape} != {want}")
+            out.append(jax.numpy.asarray(a))
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            meta.get("extra", {}))
+
+
+# ------------------------------------------------------------- FL state
+def save_fl_state(path: str, *, round_idx: int, global_trainable,
+                  client_sizes, opt_state=None) -> None:
+    tree = {"trainable": global_trainable}
+    if opt_state is not None:
+        tree["opt"] = opt_state
+    save_checkpoint(path, tree, extra={
+        "round": int(round_idx),
+        "client_sizes": [int(c) for c in client_sizes]})
+
+
+def restore_fl_state(path: str, *, like_trainable, like_opt=None):
+    like = {"trainable": like_trainable}
+    if like_opt is not None:
+        like["opt"] = like_opt
+    tree, extra = load_checkpoint(path, like)
+    return (tree["trainable"], tree.get("opt"), int(extra["round"]),
+            extra["client_sizes"])

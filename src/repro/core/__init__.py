@@ -1,0 +1,8 @@
+"""TriplePlay core: the paper's three mechanisms as composable JAX modules.
+
+- ``adapter``: attention-based adapter (§III-A)
+- ``lora`` / ``quant`` / ``qlora``: resource efficiency (§III-C)
+- ``gan``: long-tail synthetic data (§III-B)
+- ``clip``: the paper's foundation backbone (dual encoder)
+"""
+from repro.core import adapter, lora, losses, optim, quant  # noqa: F401

@@ -1,0 +1,124 @@
+"""Attention-based adapter (paper §III-A).
+
+    Att(D)   = softmax(Q K^T / sqrt(dh)) V
+    F_net(a) = ReLU(W1 a + b1) W2 + b2
+    CLIP_adapted(D) = Adapter(CLIP_pre(D))
+
+The adapter is a single multi-head attention + 2-layer ReLU FFN appended on
+top of the frozen backbone's final hidden states. For decoder LMs the
+attention is causal (no future leakage); for CLIP pooled features the input
+is a length-1 sequence. Residual connections keep the identity path so
+training starts near the pretrained function (wo/W2 are zero-init).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(rng, d: int, *, n_heads: int = 8, d_ff: int = 0,
+         dtype=jnp.float32):
+    d_ff = d_ff or d
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / jnp.sqrt(d)
+    return {
+        "wq": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "wo": jnp.zeros((d, d), dtype),
+        "w1": jax.random.normal(ks[3], (d, d_ff), dtype) * s,
+        "b1": jnp.zeros((d_ff,), dtype),
+        "w2": jnp.zeros((d_ff, d), dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def specs(d: int, *, d_ff: int = 0, dtype=jnp.float32):
+    d_ff = d_ff or d
+    f = lambda *sh: jax.ShapeDtypeStruct(sh, dtype)
+    return {"wq": f(d, d), "wk": f(d, d), "wv": f(d, d), "wo": f(d, d),
+            "w1": f(d, d_ff), "b1": f(d_ff,), "w2": f(d_ff, d), "b2": f(d,)}
+
+
+def apply(params, x: jax.Array, *, n_heads: int = 8,
+          causal: bool = True) -> jax.Array:
+    """x: (B, S, d) hidden states -> (B, S, d).
+
+    The Att(D) term runs through the blocked flash-attention op so the
+    adapter stays O(S) in memory even on 32k-token inputs."""
+    from repro.kernels import ops as kops  # late import: no cycles
+    B, S, d = x.shape
+    dh = d // n_heads
+    dt = x.dtype
+
+    def proj(w):
+        return (x @ w.astype(dt)).reshape(B, S, n_heads, dh)
+
+    q, k, v = proj(params["wq"]), proj(params["wk"]), proj(params["wv"])
+    a = kops.flash_attention(q, k, v, causal=causal and S > 1)
+    a = a.reshape(B, S, d)
+    x = x + a @ params["wo"].astype(dt)
+    h = jax.nn.relu(x @ params["w1"].astype(dt) + params["b1"].astype(dt))
+    return x + h @ params["w2"].astype(dt) + params["b2"].astype(dt)
+
+
+def _ffn(params, x, dt):
+    h = jax.nn.relu(x @ params["w1"].astype(dt) + params["b1"].astype(dt))
+    return x + h @ params["w2"].astype(dt) + params["b2"].astype(dt)
+
+
+def prefill(params, x: jax.Array, window: int, *, n_heads: int = 8):
+    """Adapter output for the LAST position plus a ring KV cache over the
+    final ``min(S, window)`` positions (so decoding stays windowed even for
+    sub-quadratic backbones). x: (B, S, d) -> ((B, 1, d), cache)."""
+    from repro.kernels import ops as kops
+    from repro.models import layers as mlayers
+    B, S, d = x.shape
+    dh = d // n_heads
+    dt = x.dtype
+    M = window  # ring_from_full pads with empty slots when window > S
+    k = (x @ params["wk"].astype(dt)).reshape(B, S, n_heads, dh)
+    v = (x @ params["wv"].astype(dt)).reshape(B, S, n_heads, dh)
+    cache = mlayers.ring_from_full(k, v, M)
+    q = (x[:, -1:] @ params["wq"].astype(dt)).reshape(B, 1, n_heads, dh)
+    a = kops.decode_attention(q, cache["k"], cache["v"],
+                              cache["slot_pos"][None]).reshape(B, 1, d)
+    y = x[:, -1:] + a @ params["wo"].astype(dt)
+    return _ffn(params, y, dt), cache
+
+
+def decode(params, x: jax.Array, cache, pos, *, n_heads: int = 8):
+    """Single-token adapter step against the ring cache. x: (B, 1, d)."""
+    from repro.kernels import ops as kops
+    import jax.numpy as jnp
+    from jax import lax
+    B, _, d = x.shape
+    dh = d // n_heads
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, 1, n_heads, dh)
+    k = (x @ params["wk"].astype(dt)).reshape(B, 1, n_heads, dh)
+    v = (x @ params["wv"].astype(dt)).reshape(B, 1, n_heads, dh)
+    M = cache["k"].shape[1]
+    slot = (pos % M).astype(jnp.int32)
+    cache = {
+        "k": lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1),
+        "v": lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1),
+        "slot_pos": lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0),
+    }
+    a = kops.decode_attention(q, cache["k"].astype(dt),
+                              cache["v"].astype(dt),
+                              cache["slot_pos"][None]).reshape(B, 1, d)
+    y = x + a @ params["wo"].astype(dt)
+    return _ffn(params, y, dt), cache
+
+
+def cache_specs(d: int, batch: int, window: int, dtype, *,
+                n_heads: int = 8):
+    dh = d // n_heads
+    sh = (batch, window, n_heads, dh)
+    return {"k": jax.ShapeDtypeStruct(sh, dtype),
+            "v": jax.ShapeDtypeStruct(sh, dtype),
+            "slot_pos": jax.ShapeDtypeStruct((window,), jnp.int32)}

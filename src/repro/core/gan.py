@@ -1,0 +1,157 @@
+"""Conditional GAN for long-tail rebalancing (paper §III-B).
+
+A small class-conditional DCGAN over 32×32 images: the generator learns the
+client's local distribution; underrepresented classes are then over-sampled
+with synthetic images (Fig. 1(b) of the paper). Trained client-side so raw
+data never leaves the client (DESIGN.md §7).
+
+min_G max_D V(D,G) = E_x[log D(x)] + E_z[log(1 - D(G(z)))], with the
+non-saturating generator objective.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import optim
+
+
+@dataclass(frozen=True)
+class GANConfig:
+    image_size: int = 32
+    channels: int = 3
+    n_classes: int = 7
+    z_dim: int = 32
+    g_dim: int = 32
+    d_dim: int = 32
+    lr: float = 2e-4
+
+
+def init_gan(rng, cfg: GANConfig):
+    ks = jax.random.split(rng, 12)
+    s = lambda f: 1.0 / jnp.sqrt(f)
+    g0 = cfg.g_dim
+    gen = {
+        "emb": jax.random.normal(ks[0], (cfg.n_classes, cfg.z_dim)) * 0.1,
+        "fc": jax.random.normal(ks[1], (2 * cfg.z_dim, 4 * 4 * 2 * g0)) *
+        s(2 * cfg.z_dim),
+        "c1": jax.random.normal(ks[2], (4, 4, 2 * g0, g0)) * 0.05,   # 4->8
+        "c2": jax.random.normal(ks[3], (4, 4, g0, g0)) * 0.05,       # 8->16
+        "c3": jax.random.normal(ks[4], (4, 4, g0, cfg.channels)) * 0.05,
+    }
+    d0 = cfg.d_dim
+    disc = {
+        "c1": jax.random.normal(ks[5], (4, 4, cfg.channels, d0)) * 0.05,
+        "c2": jax.random.normal(ks[6], (4, 4, d0, 2 * d0)) * 0.05,
+        "c3": jax.random.normal(ks[7], (4, 4, 2 * d0, 4 * d0)) * 0.05,
+        "fc": jax.random.normal(ks[8], (4 * 4 * 4 * d0, 1)) *
+        s(4 * 4 * 4 * d0),
+        "emb": jax.random.normal(ks[9], (cfg.n_classes, 4 * 4 * 4 * d0)) *
+        0.01,
+    }
+    return {"gen": gen, "disc": disc}
+
+
+def _convT(x, w, stride=2):
+    return lax.conv_transpose(x, w, (stride, stride), "SAME",
+                              dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv(x, w, stride=2):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def generate(gen, cfg: GANConfig, z, labels):
+    """z: (B, z_dim); labels: (B,) -> images (B, 32, 32, 3) in [-1, 1]."""
+    y = gen["emb"][labels]
+    h = jnp.concatenate([z, y], -1) @ gen["fc"]
+    h = jax.nn.relu(h).reshape(-1, 4, 4, 2 * cfg.g_dim)
+    h = jax.nn.relu(_convT(h, gen["c1"]))
+    h = jax.nn.relu(_convT(h, gen["c2"]))
+    return jnp.tanh(_convT(h, gen["c3"]))
+
+
+def discriminate(disc, cfg: GANConfig, images, labels, *,
+                 with_features: bool = False):
+    h = jax.nn.leaky_relu(_conv(images, disc["c1"]), 0.2)
+    h = jax.nn.leaky_relu(_conv(h, disc["c2"]), 0.2)
+    h = jax.nn.leaky_relu(_conv(h, disc["c3"]), 0.2)
+    feat = h.reshape(h.shape[0], -1)
+    logit = (feat @ disc["fc"])[:, 0]
+    proj = jnp.sum(feat * disc["emb"][labels], -1)   # projection cGAN
+    if with_features:
+        return logit + proj, feat
+    return logit + proj
+
+
+def _bce(logits, target):
+    return jnp.mean(jnp.maximum(logits, 0) - logits * target +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+@partial(jax.jit, static_argnums=(3,))
+def train_step(params, opt_states, batch, cfg: GANConfig, rng):
+    """One alternating D/G update. batch = (images, labels)."""
+    images, labels = batch
+    B = images.shape[0]
+    kz, kz2 = jax.random.split(rng)
+    z = jax.random.normal(kz, (B, cfg.z_dim))
+
+    def d_loss(disc):
+        fake = generate(params["gen"], cfg, z, labels)
+        lr_ = discriminate(disc, cfg, images, labels)
+        lf = discriminate(disc, cfg, lax.stop_gradient(fake), labels)
+        return _bce(lr_, 1.0) + _bce(lf, 0.0)
+
+    dl, dg = jax.value_and_grad(d_loss)(params["disc"])
+    disc, d_opt = optim.adam_update(dg, opt_states["disc"],
+                                    params["disc"], lr=cfg.lr, b1=0.5)
+
+    z2 = jax.random.normal(kz2, (B, cfg.z_dim))
+
+    def g_loss(gen):
+        fake = generate(gen, cfg, z2, labels)
+        lf, feat_f = discriminate(disc, cfg, fake, labels,
+                                  with_features=True)
+        _, feat_r = discriminate(disc, cfg, images, labels,
+                                 with_features=True)
+        # feature matching (Salimans et al. 2016): anchors G's statistics
+        # to the data manifold — without it the small generator collapses
+        # into the zero-image saddle of the projection discriminator
+        fm = jnp.mean((feat_r.mean(0) - feat_f.mean(0)) ** 2)
+        return _bce(lf, 1.0) + 10.0 * fm
+
+    gl, gg = jax.value_and_grad(g_loss)(params["gen"])
+    gen, g_opt = optim.adam_update(gg, opt_states["gen"],
+                                   params["gen"], lr=cfg.lr, b1=0.5)
+    return ({"gen": gen, "disc": disc},
+            {"gen": g_opt, "disc": d_opt},
+            {"d_loss": dl, "g_loss": gl})
+
+
+def train_gan(rng, cfg: GANConfig, images, labels, *, steps: int = 200,
+              batch: int = 64):
+    """Train on a client's local data; returns generator params."""
+    k0, rng = jax.random.split(rng)
+    params = init_gan(k0, cfg)
+    opt = {"gen": optim.adam_init(params["gen"]),
+           "disc": optim.adam_init(params["disc"])}
+    n = images.shape[0]
+    metrics = {}
+    for i in range(steps):
+        rng, kb, ks = jax.random.split(rng, 3)
+        idx = jax.random.randint(kb, (min(batch, n),), 0, n)
+        params, opt, metrics = train_step(
+            params, opt, (images[idx], labels[idx]), cfg, ks)
+    return params, metrics
+
+
+def synthesize(rng, gen, cfg: GANConfig, labels):
+    z = jax.random.normal(rng, (labels.shape[0], cfg.z_dim))
+    return generate(gen, cfg, z, labels)

@@ -1,0 +1,58 @@
+"""Low-rank adaptation (§III-C).
+
+A LoRA pair for a frozen weight W (k, n) is {A: (k, r), B: (r, n)}; the
+effective weight is W + (alpha/r)·A@B. A is Kaiming-init, B zero-init so
+training starts at the pretrained function. Only LoRA (+ adapter) params
+are trained and communicated in TriplePlay.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, maybe_dequantize
+
+
+def init_pair(rng, k: int, n: int, rank: int, dtype=jnp.float32):
+    a = jax.random.normal(rng, (k, rank), dtype) * (1.0 / jnp.sqrt(k))
+    b = jnp.zeros((rank, n), dtype)
+    return {"a": a, "b": b}
+
+
+def pair_specs(k: int, n: int, rank: int, dtype=jnp.float32, lead=()):
+    """Abstract ShapeDtypeStructs (for dry-run param trees)."""
+    return {"a": jax.ShapeDtypeStruct((*lead, k, rank), dtype),
+            "b": jax.ShapeDtypeStruct((*lead, rank, n), dtype)}
+
+
+def apply(x: jax.Array, lora, *, alpha: float, rank: int) -> jax.Array:
+    """Compute the low-rank delta (alpha/r)·(x@A)@B in f32, cast back."""
+    s = alpha / rank
+    h = jnp.einsum("...k,kr->...r", x.astype(lora["a"].dtype), lora["a"])
+    return (jnp.einsum("...r,rn->...n", h, lora["b"]) * s).astype(x.dtype)
+
+
+def linear(x: jax.Array, w, lora=None, *, alpha: float = 32.0,
+           rank: int = 16) -> jax.Array:
+    """y = x @ W(+dequant) [+ LoRA delta]. ``w`` may be a QTensor.
+
+    On TPU the QTensor path dispatches to the fused Pallas dequant-matmul
+    (kernels/ops.py); elsewhere it dequantizes inline (same math).
+    """
+    if isinstance(w, QTensor):
+        from repro.kernels import ops as kops  # late import: no cycles
+        y = kops.quant_matmul(x, w)
+    else:
+        y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+    if lora is not None:
+        y = y + apply(x, lora, alpha=alpha, rank=rank)
+    return y
+
+
+def merge(w, lora, *, alpha: float, rank: int) -> jax.Array:
+    """Fold the LoRA delta into a dense weight (for deployment/eval)."""
+    wd = maybe_dequantize(w, jnp.float32)
+    return wd + (alpha / rank) * lora["a"].astype(jnp.float32) @ \
+        lora["b"].astype(jnp.float32)

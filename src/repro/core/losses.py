@@ -1,0 +1,36 @@
+"""Loss functions: LM/classification cross-entropy and the CLIP symmetric
+contrastive (InfoNCE) loss."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """logits (..., V), integer labels (...). Mean over unmasked items.
+    Computed in f32 for stability regardless of model dtype."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+def clip_contrastive(img_emb: jax.Array, txt_emb: jax.Array,
+                     logit_scale: jax.Array) -> jax.Array:
+    """Symmetric InfoNCE over a batch of paired embeddings (B, d)."""
+    img = img_emb / (jnp.linalg.norm(img_emb, axis=-1, keepdims=True) + 1e-8)
+    txt = txt_emb / (jnp.linalg.norm(txt_emb, axis=-1, keepdims=True) + 1e-8)
+    logits = jnp.exp(logit_scale) * img @ txt.T           # (B, B)
+    labels = jnp.arange(logits.shape[0])
+    return 0.5 * (cross_entropy(logits, labels) +
+                  cross_entropy(logits.T, labels))

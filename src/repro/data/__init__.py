@@ -1,0 +1,1 @@
+# Synthetic long-tail datasets + batching pipeline.

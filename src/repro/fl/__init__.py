@@ -1,0 +1,2 @@
+# Federated-learning runtime: partitioning, clients, server aggregation,
+# the paper's three strategy arms, and the round simulator.

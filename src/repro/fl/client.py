@@ -1,0 +1,150 @@
+"""FL client: local TriplePlay training on a frozen (quantized) CLIP.
+
+Per round each client:
+ 1. (tripleplay) trains/uses its conditional GAN to over-sample
+    underrepresented classes until the local class histogram is balanced;
+ 2. runs local SGD/Adam steps on the adapter (+ vision LoRA) against the
+    zero-shot class-prompt head;
+ 3. returns its *update* (delta of trainable params), blockwise-quantized
+    when the strategy compresses communication.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adapter as adapter_lib
+from repro.core import clip as clip_lib
+from repro.core import gan as gan_lib
+from repro.core import losses, optim
+from repro.core.quant import (QTensor, dequantize_tree, quantize,
+                              quantize_tree, tree_bytes)
+from repro.fl.strategies import Strategy
+
+LORA_RANK = 4
+
+
+def init_trainable(rng, ccfg: clip_lib.CLIPConfig, strategy: Strategy):
+    k1, k2 = jax.random.split(rng)
+    tr: Dict[str, Any] = {"adapter": adapter_lib.init(
+        k1, ccfg.d_model, n_heads=4, d_ff=ccfg.d_model)}
+    if strategy.use_lora:
+        L = ccfg.vision_layers
+        d = ccfg.d_model
+
+        def pair(k):
+            return {"a": jax.random.normal(k, (d, LORA_RANK)) *
+                    (1 / np.sqrt(d)),
+                    "b": jnp.zeros((LORA_RANK, d))}
+
+        per_layer = []
+        for li, kl in enumerate(jax.random.split(k2, L)):
+            per_layer.append({n: pair(jax.random.fold_in(kl, i))
+                              for i, n in enumerate(("wq", "wk", "wv",
+                                                     "wo"))})
+        tr["lora"] = jax.tree.map(lambda *ls: jnp.stack(ls), *per_layer)
+    return tr
+
+
+def forward_logits(frozen, trainable, ccfg, images, class_emb):
+    """images -> zero-shot class logits through backbone+adapter."""
+    lora = trainable.get("lora")
+    feat = clip_lib.encode_image(frozen, ccfg, images, lora=lora)
+    feat = adapter_lib.apply(trainable["adapter"], feat[:, None, :],
+                             n_heads=4, causal=False)[:, 0]
+    emb = feat @ frozen["proj_v"]
+    return clip_lib.zero_shot_logits(emb, class_emb, frozen["logit_scale"])
+
+
+@partial(jax.jit, static_argnums=(5,))
+def _local_step(frozen, trainable, opt_state, batch, class_emb, ccfg, lr):
+    images, labels = batch
+
+    def loss_fn(tr):
+        logits = forward_logits(frozen, tr, ccfg, images, class_emb)
+        ce = losses.cross_entropy(logits, labels)
+        return ce, losses.accuracy(logits, labels)
+
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        trainable)
+    trainable, opt_state = optim.adam_update(grads, opt_state, trainable,
+                                             lr=lr, grad_clip=1.0)
+    return trainable, opt_state, loss, acc
+
+
+@dataclass
+class Client:
+    cid: int
+    images: np.ndarray
+    labels: np.ndarray
+    n_classes: int
+    strategy: Strategy
+    gan_params: Optional[dict] = None
+    gan_cfg: Optional[gan_lib.GANConfig] = None
+    aug_images: Optional[np.ndarray] = None
+    aug_labels: Optional[np.ndarray] = None
+
+    @property
+    def n(self) -> int:
+        return len(self.labels)
+
+    def prepare_gan(self, rng, *, steps: int = 150):
+        """Train the local conditional GAN and synthesize a rebalancing
+        set so every class reaches the local max count (paper §III-B)."""
+        self.gan_cfg = gan_lib.GANConfig(n_classes=self.n_classes)
+        self.gan_params, _ = gan_lib.train_gan(
+            rng, self.gan_cfg, jnp.asarray(self.images),
+            jnp.asarray(self.labels), steps=steps,
+            batch=min(64, max(8, self.n)))
+        hist = np.bincount(self.labels, minlength=self.n_classes)
+        target = hist.max()
+        need = np.concatenate([
+            np.full(max(0, int(target - hist[c])), c, np.int32)
+            for c in range(self.n_classes)]) if target else np.array([], np.int32)
+        if len(need) == 0:
+            self.aug_images = np.zeros((0, *self.images.shape[1:]),
+                                       np.float32)
+            self.aug_labels = np.zeros((0,), np.int32)
+            return
+        imgs = gan_lib.synthesize(jax.random.fold_in(rng, 1),
+                                  self.gan_params["gen"], self.gan_cfg,
+                                  jnp.asarray(need))
+        self.aug_images = np.asarray(imgs, np.float32)
+        self.aug_labels = need
+
+    def _pool(self):
+        if self.strategy.use_gan and self.aug_images is not None and \
+                len(self.aug_labels):
+            return (np.concatenate([self.images, self.aug_images]),
+                    np.concatenate([self.labels, self.aug_labels]))
+        return self.images, self.labels
+
+    def local_train(self, frozen, trainable, class_emb, ccfg, *,
+                    steps: int, batch_size: int, lr: float, seed: int):
+        rng = np.random.RandomState(seed)
+        imgs, labs = self._pool()
+        opt = optim.adam_init(trainable)
+        loss = acc = 0.0
+        for _ in range(steps):
+            idx = rng.randint(0, len(labs), min(batch_size, len(labs)))
+            trainable, opt, loss, acc = _local_step(
+                frozen, trainable, opt,
+                (jnp.asarray(imgs[idx]), jnp.asarray(labs[idx])),
+                class_emb, ccfg, lr)
+        return trainable, {"loss": float(loss), "acc": float(acc)}
+
+    def make_update(self, before, after):
+        """Delta of trainables, quantized per strategy. Returns
+        (update_tree, payload_bytes)."""
+        delta = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32),
+                             after, before)
+        if self.strategy.comm_bits:
+            delta = quantize_tree(delta, bits=self.strategy.comm_bits,
+                                  block=64, min_size=256,
+                                  skip_names=("slot",))
+        return delta, tree_bytes(delta)

@@ -1,0 +1,36 @@
+"""FL server: weighted aggregation of (quantized) client updates.
+
+Implements the paper's aggregation
+    w_final = Σ_i (m_i / Σ_j m_j) · dequant(update_i)
+applied in the trainable (LoRA/adapter) basis: updates are deltas, so the
+new global trainables are  w_global + Σ weighted deltas. On the production
+mesh the same reduction is a ``psum`` over the (pod, data) axes — see
+``fed_round_spec`` in launch/train.py.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, dequantize_tree
+
+
+def aggregate(global_trainable, updates: Sequence[Tuple[int, object]]):
+    """updates: list of (m_i = client sample count, delta tree)."""
+    total = float(sum(m for m, _ in updates))
+    acc = None
+    for m, delta in updates:
+        d = dequantize_tree(delta, jnp.float32)
+        w = m / total
+        acc = jax.tree.map(lambda x, a=None: w * x, d) if acc is None else \
+            jax.tree.map(lambda a, x: a + w * x, acc, d)
+    return jax.tree.map(lambda g, a: (g.astype(jnp.float32) + a).astype(
+        g.dtype), global_trainable, acc)
+
+
+def secure_sum_bytes(updates) -> int:
+    """Total uplink payload this round (comm-cost bookkeeping)."""
+    from repro.core.quant import tree_bytes
+    return int(sum(tree_bytes(d) for _, d in updates))

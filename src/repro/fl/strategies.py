@@ -1,0 +1,30 @@
+"""The three experimental arms of the paper (Figs. 3-5).
+
+- fedclip      : frozen CLIP + attention adapter, fp32 communication.
+- qlora_nogan  : + NF4-quantized backbone + LoRA, quantized (int8) comm.
+- tripleplay   : qlora_nogan + client-side GAN long-tail rebalancing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str
+    use_lora: bool
+    backbone_bits: int       # 0 = bf16/f32 backbone
+    backbone_mode: str
+    comm_bits: int           # 0 = fp32 updates
+    use_gan: bool
+
+
+STRATEGIES = {
+    "fedclip": Strategy("fedclip", use_lora=False, backbone_bits=0,
+                        backbone_mode="linear", comm_bits=0, use_gan=False),
+    "qlora_nogan": Strategy("qlora_nogan", use_lora=True, backbone_bits=4,
+                            backbone_mode="nf4", comm_bits=8,
+                            use_gan=False),
+    "tripleplay": Strategy("tripleplay", use_lora=True, backbone_bits=4,
+                           backbone_mode="nf4", comm_bits=8, use_gan=True),
+}

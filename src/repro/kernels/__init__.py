@@ -1,0 +1,2 @@
+# Pallas TPU kernels (quant_matmul, blockwise_quant, flash_attention) with
+# jnp oracles in ref.py and backend dispatch in ops.py.

@@ -1,0 +1,137 @@
+"""jit-ready wrappers around the attention / quantization hot spots.
+
+Dispatch:
+- Pallas TPU kernels when running on TPU (or interpret mode when forced);
+- under a production mesh Runtime, an explicit ``shard_map`` distribution
+  (batch → dp axes, query heads padded to the ``model`` axis, KV expanded
+  per local head; decode uses flash-decoding log-sum-exp combination over
+  the slot-sharded cache) — relying on GSPMD propagation through the
+  blocked-softmax scan replicates K/V across the batch axis, which is
+  exactly the failure the explicit mapping removes;
+- plain jnp reference otherwise (unit tests, CPU examples).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import quant as qlib
+from repro.kernels import ref
+from repro.models import runtime as rt_lib
+
+_FORCE = os.environ.get("REPRO_PALLAS", "")  # "interpret" | "tpu" | ""
+
+
+def _use_pallas() -> bool:
+    return _FORCE in ("interpret", "tpu") or jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return _FORCE == "interpret" or jax.default_backend() != "tpu"
+
+
+def _kernel_flash(q, k, v, *, causal, window, q_chunk=512, k_chunk=512):
+    if _use_pallas():
+        from repro.kernels import flash_attention as fk
+        return fk.flash_attention(q, k, v, causal=causal, window=window,
+                                  interpret=_interpret())
+    return ref.flash_attention(q, k, v, causal=causal, window=window,
+                               q_chunk=q_chunk, k_chunk=k_chunk)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    q_chunk=512, k_chunk=512):
+    rt = rt_lib.get_runtime()
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    if rt is None:
+        return _kernel_flash(q, k, v, causal=causal, window=window,
+                             q_chunk=q_chunk, k_chunk=k_chunk)
+    mesh, m, dp = rt.mesh, rt.tp_size, rt.dp_axes
+    dp_sz = rt.dp_size
+    if B % dp_sz:
+        dp, dp_sz = (), 1
+    G = H // Hkv
+    Hp = -(-H // m) * m
+    if Hp != H:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+    Hl = Hp // m
+
+    def local(q_l, k_l, v_l):
+        r = lax.axis_index(rt.tp_axis)
+        gids = r * Hl + jnp.arange(Hl)
+        kv_ids = jnp.clip(gids, 0, H - 1) // G
+        k_e = jnp.take(k_l, kv_ids, axis=2)
+        v_e = jnp.take(v_l, kv_ids, axis=2)
+        return _kernel_flash(q_l, k_e, v_e, causal=causal, window=window,
+                             q_chunk=q_chunk, k_chunk=k_chunk)
+
+    out = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp or None, None, rt.tp_axis, None),
+                  P(dp or None, None, None, None),
+                  P(dp or None, None, None, None)),
+        out_specs=P(dp or None, None, rt.tp_axis, None),
+        check_vma=False)(q, k, v)
+    return out[:, :, :H]
+
+
+def decode_attention(q, k_cache, v_cache, slot_pos):
+    rt = rt_lib.get_runtime()
+    B, _, H, D = q.shape
+    M = k_cache.shape[1]
+    if rt is None or M % rt.tp_size:
+        return ref.decode_attention(q, k_cache, v_cache, slot_pos)
+    mesh, dp = rt.mesh, rt.dp_axes
+    if B % rt.dp_size:
+        dp = ()
+
+    def local(q_l, k_l, v_l, sp_l):
+        mi, li, acci = ref.decode_attention_partial(q_l, k_l, v_l, sp_l)
+        mg = lax.pmax(mi, rt.tp_axis)
+        corr = jnp.exp(mi - mg)
+        lg = lax.psum(li * corr, rt.tp_axis)
+        accg = lax.psum(acci * corr[..., None], rt.tp_axis)
+        out = accg / jnp.maximum(lg, 1e-30)[..., None]
+        Bl = q_l.shape[0]
+        return out.reshape(Bl, 1, H, D).astype(q_l.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp or None, None, None, None),
+                  P(dp or None, rt.tp_axis, None, None),
+                  P(dp or None, rt.tp_axis, None, None),
+                  P(None, rt.tp_axis)),
+        out_specs=P(dp or None, None, None, None),
+        check_vma=False)(q, k_cache, v_cache, slot_pos)
+
+
+def selective_scan(dt, x, Bm, Cm, A):
+    """Mamba-1 recurrence: Pallas on TPU, chunked associative scan on CPU
+    (models/ssm.py calls this from inside its shard_map body)."""
+    if _use_pallas():
+        from repro.kernels import selective_scan as sk
+        return sk.selective_scan(dt, x, Bm, Cm, A,
+                                 interpret=_interpret())
+    return None  # caller falls back to its chunked associative scan
+
+
+def quant_matmul(x, qt: qlib.QTensor):
+    # qt.q.ndim == 3 means a plain 2-D weight: (G, block[/2], N)
+    if _use_pallas() and qt.q.ndim == 3:
+        from repro.kernels import quant_matmul as qk
+        return qk.quant_matmul(x, qt, interpret=_interpret())
+    return ref.quant_matmul(x, qt)
+
+
+def blockwise_quant(x, *, bits=8, block=128, mode="linear"):
+    if _use_pallas() and x.ndim == 2 and mode != "nf4":
+        from repro.kernels import blockwise_quant as bk
+        return bk.blockwise_quant(x, bits=bits, block=block,
+                                  interpret=_interpret())
+    return ref.blockwise_quant(x, bits=bits, block=block, mode=mode)

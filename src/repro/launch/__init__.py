@@ -1,0 +1,2 @@
+# Launchers: mesh construction, sharding rules, the multi-pod dry-run,
+# and the FL training / serving drivers.

@@ -1,0 +1,499 @@
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh)
+combination against the production mesh with ShapeDtypeStruct stand-ins
+(no allocation), and record memory / FLOP / collective statistics for
+EXPERIMENTS.md §Dry-run and the roofline analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+"""
+# The placeholder-device flag must be set before jax initializes devices —
+# keep these as the very first executable lines (per the dry-run contract).
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.core import optim
+from repro.launch import shardings as sh
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import build_model
+from repro.models import runtime as rt_lib
+
+# long_500k needs sub-quadratic attention (see DESIGN.md §4): run for the
+# SSM / hybrid / SWA architectures, skip for pure full-attention archs.
+LONG_OK = {"falcon-mamba-7b", "recurrentgemma-2b", "h2o-danube-3-4b"}
+
+_DT_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+             "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+             "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+             "c128": 16}
+_COLL_RE = re.compile(
+    r"=\s*(\(?[^)]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_BRACES_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective traffic by op kind, from the partitioned HLO.
+
+    Bytes are the HLO *output* buffer sizes per op; the roofline applies
+    op-specific ring factors (see benchmarks/roofline.py)."""
+    stats: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            if dt not in _DT_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DT_BYTES[dt]
+        g = _GROUP_RE.search(line)
+        if g:
+            gsize = int(g.group(2))
+        else:
+            g2 = _GROUP_BRACES_RE.search(line)
+            gsize = len(g2.group(1).split(",")) if g2 else 0
+        e = stats.setdefault(kind, {"count": 0, "bytes": 0, "gsize": 0})
+        e["count"] += 1
+        e["bytes"] += nbytes
+        e["gsize"] = max(e["gsize"], gsize)
+    return stats
+
+
+def lower_step(arch: str, shape_name: str, *, multi_pod: bool,
+               quant_bits: int = 0, quant_mode: str = "linear",
+               seq_shard: bool = True, remat: bool = True,
+               kv_quant: int = 0, grad_accum: int = 1,
+               trainable_dtype: str = "", extra_cfg=None,
+               cfg_override=None):
+    """Returns (lowered, model, cfg, mesh) for one combination."""
+    shape = INPUT_SHAPES[shape_name]
+    cfg = cfg_override or get_config(arch)
+    if quant_bits and not cfg.quant_bits:
+        cfg = cfg.replace(quant_bits=quant_bits, quant_mode=quant_mode)
+    if kv_quant and not cfg.kv_quant_bits:
+        cfg = cfg.replace(kv_quant_bits=kv_quant)
+    if grad_accum > 1:
+        cfg = cfg.replace(grad_accum=grad_accum)
+    if trainable_dtype:
+        cfg = cfg.replace(trainable_dtype=trainable_dtype)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    cfg = cfg.replace(seq_shard=seq_shard, remat=remat)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes(mesh)
+    rt = rt_lib.Runtime(mesh=mesh, dp_axes=dp, tp_axis="model")
+    model = build_model(cfg)
+
+    with rt_lib.runtime(rt), mesh:
+        specs = model.param_specs()
+        pspec = sh.param_specs_tree(cfg, specs, mesh)
+        psh = sh.to_shardings(mesh, pspec)
+        batch = model.input_specs(shape)
+        if shape.kind == "train":
+            bsh = sh.to_shardings(
+                mesh, sh.batch_specs_tree(cfg, batch, mesh, dp))
+            opt = optim.adam_specs(specs["trainable"])
+            osh = jax.tree.map(
+                lambda _: jax.NamedSharding(mesh, P()), opt)
+
+            def fn(frozen, trainable, opt_state, b):
+                return model.train_step(frozen, trainable, opt_state, b)
+
+            lowered = jax.jit(fn, in_shardings=(
+                psh["frozen"], psh["trainable"], osh, bsh)).lower(
+                    specs["frozen"], specs["trainable"], opt, batch)
+        elif shape.kind == "prefill":
+            bsh = sh.to_shardings(
+                mesh, sh.batch_specs_tree(cfg, batch, mesh, dp))
+
+            def fn(frozen, trainable, b):
+                return model.prefill(frozen, trainable, b)
+
+            lowered = jax.jit(fn, in_shardings=(
+                psh["frozen"], psh["trainable"], bsh)).lower(
+                    specs["frozen"], specs["trainable"], batch)
+        else:  # decode
+            cache = batch["cache"]
+            csh = sh.to_shardings(
+                mesh, sh.cache_specs_tree(cfg, cache, mesh, dp))
+            tsh = sh.to_shardings(
+                mesh, sh.batch_specs_tree(
+                    cfg, {"tokens": batch["tokens"]}, mesh, dp))["tokens"]
+
+            def fn(frozen, trainable, cache, tokens, pos):
+                return model.decode_step(frozen, trainable, cache, tokens,
+                                         pos)
+
+            lowered = jax.jit(fn, in_shardings=(
+                psh["frozen"], psh["trainable"], csh, tsh,
+                jax.NamedSharding(mesh, P()))).lower(
+                    specs["frozen"], specs["trainable"], cache,
+                    batch["tokens"], batch["pos"])
+    return lowered, model, cfg, mesh
+
+
+def calibrated_costs(arch: str, shape_name: str, *, multi_pod: bool,
+                     quant_bits: int = 0, quant_mode: str = "linear",
+                     seq_shard: bool = True, remat: bool = True,
+                     kv_quant: int = 0, grad_accum: int = 1,
+                     trainable_dtype: str = "", extra_cfg=None) -> dict:
+    """True per-step cost estimates.
+
+    XLA's cost_analysis counts each while-loop body ONCE regardless of trip
+    count, so the scanned/blocked production graphs undercount FLOPs by
+    ~n_layers×. Calibration lowers two small variants with the layer stack
+    UNROLLED and every inner loop removed (single-tile attention, one-chunk
+    recurrent scans, batched expert einsum — cfg.calibrate), then
+    extrapolates linearly in depth:  cost(L) = c1 + (c2 - c1)·(reps - 1).
+    """
+    base = get_config(arch)
+    if quant_bits:
+        base = base.replace(quant_bits=quant_bits, quant_mode=quant_mode)
+    if kv_quant:
+        base = base.replace(kv_quant_bits=kv_quant)
+    if grad_accum > 1:
+        base = base.replace(grad_accum=grad_accum)
+    if trainable_dtype:
+        base = base.replace(trainable_dtype=trainable_dtype)
+    if extra_cfg:
+        base = base.replace(**extra_cfg)
+    pat = len(base.attn_pattern)
+    reps_true = (base.n_layers - base.first_k_dense) / pat
+
+    def one(reps):
+        # grad_accum adds a microbatch scan (another uncounted loop), and
+        # an A-way accumulated step costs ~= the single-shot step, so
+        # calibration always runs accum=1.
+        cfg = base.replace(
+            n_layers=base.first_k_dense + reps * pat,
+            encoder_layers=(reps * pat if base.encoder_layers else 0),
+            unroll_layers=True, calibrate=True, grad_accum=1)
+        lowered, *_ = lower_step(
+            arch, shape_name, multi_pod=multi_pod, seq_shard=seq_shard,
+            remat=remat, cfg_override=cfg)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis() or {}
+        coll = parse_collectives(compiled.as_text())
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)), coll)
+
+    f1, b1, c1 = one(1)
+    f2, b2, c2 = one(2)
+    ex = lambda a, b: a + (b - a) * (reps_true - 1)
+    coll = {}
+    for kind in set(c1) | set(c2):
+        e1 = c1.get(kind, {"count": 0, "bytes": 0, "gsize": 0})
+        e2 = c2.get(kind, {"count": 0, "bytes": 0, "gsize": 0})
+        coll[kind] = {
+            "count": int(round(ex(e1["count"], e2["count"]))),
+            "bytes": float(ex(e1["bytes"], e2["bytes"])),
+            "gsize": max(e1["gsize"], e2["gsize"]),
+        }
+    return {"hlo_flops_cal": ex(f1, f2), "hlo_bytes_cal": ex(b1, b2),
+            "collectives_cal": coll}
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            quant_bits: int = 0, quant_mode: str = "linear",
+            seq_shard: bool = True, remat: bool = True,
+            kv_quant: int = 0, grad_accum: int = 1,
+            trainable_dtype: str = "", extra_cfg=None,
+            verbose: bool = True, calibrate: bool = True) -> dict:
+    t0 = time.time()
+    lowered, model, cfg, mesh = lower_step(
+        arch, shape_name, multi_pod=multi_pod, quant_bits=quant_bits,
+        quant_mode=quant_mode, seq_shard=seq_shard, remat=remat,
+        kv_quant=kv_quant, grad_accum=grad_accum,
+        trainable_dtype=trainable_dtype, extra_cfg=extra_cfg)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text())
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    n_total = cfg.param_count()
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "quant_bits": quant_bits, "quant_mode": quant_mode,
+        "seq_shard": seq_shard, "remat": remat,
+        "kv_quant": kv_quant, "grad_accum": grad_accum,
+        "trainable_dtype": trainable_dtype or "float32",
+        "extra_cfg": extra_cfg or {},
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "hlo_flops": float(cost.get("flops", 0.0)),
+        "hlo_bytes": float(cost.get("bytes accessed", 0.0)),
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+        "collectives": coll,
+        "params_total": n_total, "params_active": n_active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    if calibrate:
+        try:
+            rec.update(calibrated_costs(
+                arch, shape_name, multi_pod=multi_pod,
+                quant_bits=quant_bits, quant_mode=quant_mode,
+                seq_shard=seq_shard, remat=remat, kv_quant=kv_quant,
+                grad_accum=grad_accum, trainable_dtype=trainable_dtype,
+                extra_cfg=extra_cfg))
+        except Exception as e:  # noqa: BLE001
+            rec["calibration_error"] = repr(e)[:300]
+    if verbose:
+        print(f"== {arch} × {shape_name} × {rec['mesh']}"
+              f"{' q' + str(quant_bits) if quant_bits else ''} ==")
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}"
+              f"GiB out={mem.output_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB (per device)")
+        print(f"  cost_analysis: flops={rec['hlo_flops']:.3e} "
+              f"bytes={rec['hlo_bytes']:.3e} (per device, loop bodies 1x)")
+        if "hlo_flops_cal" in rec:
+            print(f"  calibrated:   flops={rec['hlo_flops_cal']:.3e} "
+                  f"bytes={rec['hlo_bytes_cal']:.3e} (per device)")
+        print(f"  collectives: " + (", ".join(
+            f"{k}:{v['count']}x {v['bytes']/2**20:.1f}MiB"
+            for k, v in coll.items()) or "none"))
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s",
+              flush=True)
+    return rec
+
+
+def fed_agg_dryrun(arch: str, *, multi_pod: bool = True,
+                   comm_bits: int = 8) -> dict:
+    """Lower + compile the federated aggregation step at production scale:
+    every (pod, data) slice holds one client's (optionally quantized)
+    LoRA+adapter delta; the server average is a weighted psum over the
+    client axes — cross-pod DCN carries only these compressed bytes,
+    which is TriplePlay's communication claim (paper Eq. w_final).
+    """
+    from jax.sharding import NamedSharding
+    from repro.core.quant import qtensor_specs
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_axes(mesh)
+    n_clients = 1
+    for a in dp:
+        n_clients *= mesh.shape[a]
+    model = build_model(cfg)
+    tr = model.param_specs()["trainable"]
+
+    def stack(s):
+        # per-client quantization of ≥2-D leaves (blocks along the leaf's
+        # own contraction dim; the client dim is a lead dim)
+        if comm_bits and len(s.shape) >= 2 and \
+                int(np.prod(s.shape)) >= 256:
+            return qtensor_specs((n_clients, *s.shape), jnp.float32,
+                                 bits=comm_bits, block=64)
+        return jax.ShapeDtypeStruct((n_clients, *s.shape), jnp.float32)
+
+    stacked = jax.tree.map(stack, tr)
+    weights = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+
+    from repro.core.quant import QTensor, dequantize
+
+    def leaf_weighted(l, w):
+        d = dequantize(l, jnp.float32) if isinstance(l, QTensor) else l
+        return jnp.einsum("c...,c->...", d.astype(jnp.float32),
+                          w / jnp.sum(w))
+
+    def fed_agg_psum(deltas, w):
+        """GSPMD reduction over the client-sharded dim. NOTE: XLA must
+        dequantize before it can sum -> the all-reduce moves f32 bytes
+        regardless of the payload dtype (measured; see EXPERIMENTS §Perf
+        FL-level) — quantized FL aggregation needs a gather schedule."""
+        return jax.tree.map(lambda l: leaf_weighted(l, w), deltas,
+                            is_leaf=lambda l: isinstance(l, QTensor))
+
+    def fed_agg_gather(deltas, w):
+        """shard_map: all-gather the (int8) payloads over the client axes
+        — compressed bytes on the wire — then dequantize + weighted-sum
+        locally (what a real FL server/hierarchical aggregator does)."""
+        def local(d_loc, w_full):
+            g = jax.tree.map(
+                lambda l: jax.lax.all_gather(l, dp, axis=0, tiled=True),
+                d_loc)
+            return jax.tree.map(lambda l: leaf_weighted(l, w_full), g,
+                                is_leaf=lambda l: isinstance(l, QTensor))
+        in_specs = (jax.tree.map(
+            lambda l: P(dp) if not isinstance(l, QTensor) else
+            QTensor(q=P(dp), scales=P(dp), bits=l.bits, mode=l.mode,
+                    block=l.block, out_dtype=l.out_dtype,
+                    orig_shape=l.orig_shape),
+            stacked, is_leaf=lambda l: isinstance(l, QTensor)), P())
+        out_specs = jax.tree.map(
+            lambda l: P(), jax.eval_shape(
+                lambda d, w: fed_agg_psum(d, w), stacked, weights))
+        return jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)(
+                                 deltas, w)
+
+    def fed_agg_hier(deltas, w):
+        """Hierarchical: weighted f32 psum within each pod (fast ICI),
+        then int8 re-quantized exchange ACROSS pods only — the scarce
+        DCN link carries compressed bytes. Requires the multi-pod mesh."""
+        def local(d_loc, w_full):
+            r_pod = jax.lax.axis_index("pod")
+            r_data = jax.lax.axis_index("data")
+            cid = r_pod * mesh.shape["data"] + r_data
+            wi = jnp.take(w_full, cid)
+
+            def one(l):
+                d = dequantize(l, jnp.float32)[0] if isinstance(
+                    l, QTensor) else l.astype(jnp.float32)[0]
+                pod_sum = jax.lax.psum(d * wi, "data")     # ICI, f32
+                flat = pod_sum.reshape(-1)
+                pad = (-flat.size) % 64
+                flat = jnp.pad(flat, (0, pad)).reshape(-1, 64)
+                s = jnp.maximum(jnp.abs(flat).max(-1, keepdims=True),
+                                1e-12) / 127.0
+                q = jnp.clip(jnp.round(flat / s), -127,
+                             127).astype(jnp.int8)
+                qg = jax.lax.all_gather(q, "pod")          # DCN, int8
+                sg = jax.lax.all_gather(s, "pod")
+                tot = (qg.astype(jnp.float32) * sg).sum(0)
+                return tot.reshape(-1)[:pod_sum.size].reshape(
+                    pod_sum.shape) / jnp.sum(w_full)
+            return jax.tree.map(one, d_loc,
+                                is_leaf=lambda l: isinstance(l, QTensor))
+        in_specs = (jax.tree.map(
+            lambda l: P(dp) if not isinstance(l, QTensor) else
+            QTensor(q=P(dp), scales=P(dp), bits=l.bits, mode=l.mode,
+                    block=l.block, out_dtype=l.out_dtype,
+                    orig_shape=l.orig_shape),
+            stacked, is_leaf=lambda l: isinstance(l, QTensor)), P())
+        out_specs = jax.tree.map(
+            lambda l: P(), jax.eval_shape(fed_agg_psum, stacked, weights))
+        return jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)(
+                                 deltas, w)
+
+    dsh = jax.tree.map(
+        lambda _: NamedSharding(mesh, P(dp)), stacked,
+        is_leaf=lambda l: isinstance(l, jax.ShapeDtypeStruct))
+    out = {"arch": arch, "comm_bits": comm_bits, "n_clients": n_clients}
+    schedules = [("psum", fed_agg_psum), ("gather", fed_agg_gather)]
+    if multi_pod:
+        schedules.append(("hierarchical", fed_agg_hier))
+    with mesh:
+        for sched, fn in schedules:
+            lowered = jax.jit(fn, in_shardings=(
+                dsh, NamedSharding(mesh, P()))).lower(stacked, weights)
+            compiled = lowered.compile()
+            coll = parse_collectives(compiled.as_text())
+            total = sum(v["bytes"] for v in coll.values())
+            # cross-pod (DCN) share: collectives whose groups span pods
+            pod_sz = mesh.shape.get("pod", 1)
+            cross = sum(v["bytes"] for v in coll.values()
+                        if v.get("gsize", 0) in (pod_sz, n_clients)
+                        and pod_sz > 1)
+            out[f"collective_bytes_{sched}"] = total
+            out[f"cross_pod_bytes_{sched}"] = cross
+            print(f"fed-agg {arch} "
+                  f"({'2x16x16' if multi_pod else '16x16'}, "
+                  f"{n_clients} clients, comm_bits={comm_bits}, "
+                  f"{sched}): wire={total/2**20:.1f}MiB/device "
+                  f"cross-pod={cross/2**20:.1f}MiB")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--quant", type=int, default=0, choices=[0, 4, 8])
+    ap.add_argument("--quant-mode", default="linear",
+                    choices=["linear", "nf4"])
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--kv-quant", type=int, default=0, choices=[0, 8])
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--all", action="store_true",
+                    help="full sweep: every arch × shape")
+    ap.add_argument("--fed-agg", action="store_true",
+                    help="lower the federated aggregation step instead")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    if args.fed_agg:
+        archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+        for arch in archs:
+            for bits in (0, args.quant or 8):
+                rec = fed_agg_dryrun(
+                    arch, multi_pod=args.mesh != "single", comm_bits=bits)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+        return
+
+    archs = list(ARCHS) if args.arch == "all" or args.all else \
+        args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" or args.all else \
+        args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            if shape == "long_500k" and arch not in LONG_OK:
+                print(f"-- skip {arch} × long_500k (full attention; "
+                      "see DESIGN.md §4)", flush=True)
+                continue
+            for mp in meshes:
+                try:
+                    rec = run_one(arch, shape, multi_pod=mp,
+                                  quant_bits=args.quant,
+                                  quant_mode=args.quant_mode,
+                                  seq_shard=not args.no_seq_shard,
+                                  remat=not args.no_remat,
+                                  kv_quant=args.kv_quant,
+                                  grad_accum=args.grad_accum)
+                    records.append(rec)
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps(rec) + "\n")
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)[:500]))
+                    print(f"!! FAIL {arch} × {shape} × "
+                          f"{'multi' if mp else 'single'}: {e!r}"[:600],
+                          flush=True)
+    print(f"\n{len(records)} ok, {len(failures)} failed")
+    for f in failures:
+        print("  FAIL", f)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis only
+carries data/client parallelism and the FL aggregation all-reduce, so the
+slow DCN link between pods moves only compressed adapter/LoRA bytes
+(TriplePlay's communication story — DESIGN.md §4).
+
+A function, not a module constant: importing this module never touches jax
+device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)}. "
+            "Set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (dryrun.py does this).")
+    try:
+        from jax.sharding import AxisType
+        axis_types = (AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types, devices=devices)
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_debug_mesh(shape=(1, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for CPU multi-device tests (8 fake devices)."""
+    n = 1
+    for s in shape:
+        n *= s
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes, (AxisType.Auto,) * len(axes),
+                             devices=jax.devices()[:n])
+    except (ImportError, TypeError):
+        return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

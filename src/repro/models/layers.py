@@ -1,0 +1,250 @@
+"""Shared transformer building blocks: norms, RoPE, GQA attention
+(train/prefill/decode with ring-buffer sliding-window caches), MLPs.
+
+All weights may be ``QTensor`` (quantized backbone — paper §III-C); every
+projection optionally carries a LoRA pair. Weights are bias-free
+(llama-convention; a deviation for starcoder2/whisper, noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import lora as lora_lib
+from repro.core.quant import QTensor
+from repro.kernels import ops as kops
+from repro.configs.base import ModelConfig
+
+
+# ------------------------------------------------------------------ norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (S,) or scalar."""
+    B, S, H, D = x.shape
+    half = D // 2
+    freq = jnp.exp(-jnp.log(theta) *
+                   jnp.arange(half, dtype=jnp.float32) / half)
+    ang = jnp.asarray(positions, jnp.float32).reshape(-1)[:, None] * freq
+    cos, sin = jnp.cos(ang), jnp.sin(ang)          # (S, half)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(
+        jnp.float32)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ linear
+def linear(x, w, lo=None, *, cfg: ModelConfig):
+    return lora_lib.linear(x, w, lo, alpha=cfg.lora_alpha,
+                           rank=cfg.lora_rank)
+
+
+# ------------------------------------------------------------------ attention
+def init_attention(rng, cfg: ModelConfig, dtype, *, cross: bool = False):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(rng, 4)
+    s = lambda fan_in: 1.0 / jnp.sqrt(fan_in)
+    pre = "c" if cross else ""
+    return {
+        pre + "wq": jax.random.normal(ks[0], (d, qd), dtype) * s(d),
+        pre + "wk": jax.random.normal(ks[1], (d, kvd), dtype) * s(d),
+        pre + "wv": jax.random.normal(ks[2], (d, kvd), dtype) * s(d),
+        pre + "wo": jax.random.normal(ks[3], (qd, d), dtype) * s(qd),
+    }
+
+
+def attention_specs(cfg: ModelConfig, dtype, *, cross: bool = False,
+                    lead=()):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    f = lambda *sh: jax.ShapeDtypeStruct((*lead, *sh), dtype)
+    pre = "c" if cross else ""
+    return {pre + "wq": f(d, qd), pre + "wk": f(d, kvd),
+            pre + "wv": f(d, kvd), pre + "wo": f(qd, d)}
+
+
+def attention(p, x, positions, cfg: ModelConfig, *, lora=None,
+              causal=True, window=None, kv_x=None, use_rope=True,
+              prefix=""):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    lo = lora or {}
+    g = lambda n: lo.get(prefix + n)
+    q = linear(x, p[prefix + "wq"], g("wq"), cfg=cfg)
+    src = kv_x if kv_x is not None else x
+    k = linear(src, p[prefix + "wk"], g("wk"), cfg=cfg)
+    v = linear(src, p[prefix + "wv"], g("wv"), cfg=cfg)
+    Skv = src.shape[1]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    if use_rope and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if cfg.calibrate:  # single-tile attention: exact FLOP accounting
+        out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_chunk=S, k_chunk=Skv)
+    else:
+        out = kops.flash_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(B, S, cfg.q_dim)
+    y = linear(out, p[prefix + "wo"], g("wo"), cfg=cfg)
+    return y, (k, v)
+
+
+def ring_from_full(k, v, M: int, *, kv_quant: bool = False):
+    """Convert full prefill K/V (B, S, H, D) into a ring cache of M slots.
+
+    Slot s holds the largest position p < S with p % M == s (i.e. the last
+    min(S, M) tokens laid out ring-consistently); slots with no such p are
+    empty (slot_pos = -1), so decoding can continue at position S with
+    ``slot = pos % M`` for both full (M >= max context) and sliding-window
+    (M = window) caches."""
+    S = k.shape[1]
+    s = jnp.arange(M, dtype=jnp.int32)
+    p = s + ((S - 1 - s) // M) * M
+    valid = s < S
+    slot_pos = jnp.where(valid, p, -1).astype(jnp.int32)
+    if M != S:
+        idx = jnp.clip(p, 0, S - 1)
+        k = jnp.take(k, idx, axis=1)
+        v = jnp.take(v, idx, axis=1)
+    out = {"slot_pos": slot_pos}
+    kq, ks = quant_kv(k, kv_quant)
+    vq, vs = quant_kv(v, kv_quant)
+    out["k"], out["v"] = kq, vq
+    if kv_quant:
+        out["k_scale"], out["v_scale"] = ks, vs
+    return out
+
+
+def _kv_dtype(cfg: ModelConfig, dtype):
+    return jnp.int8 if cfg.kv_quant_bits == 8 else dtype
+
+
+def quant_kv(x, enabled: bool):
+    """Per-(token, head) absmax int8 quantization of K/V rows.
+    x: (..., D) -> (int8 payload, f32 scale (..., 1))."""
+    if not enabled:
+        return x, None
+    xf = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.abs(xf).max(-1, keepdims=True), 1e-12) / 127.0
+    return jnp.clip(jnp.round(xf / s), -127, 127).astype(jnp.int8), s
+
+
+def dequant_kv(x, scale, dtype):
+    if scale is None:
+        return x.astype(dtype)
+    return (x.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Ring-buffer KV cache for one layer. ``max_len`` = window for SWA.
+    With cfg.kv_quant_bits == 8 the cache stores int8 rows + f32 scales
+    (paper-aligned quantization applied to serving state — §Perf)."""
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    c = {"k": jnp.zeros(shape, _kv_dtype(cfg, dtype)),
+         "v": jnp.zeros(shape, _kv_dtype(cfg, dtype)),
+         "slot_pos": jnp.full((max_len,), -1, jnp.int32)}
+    if cfg.kv_quant_bits == 8:
+        c["k_scale"] = jnp.zeros((*shape[:3], 1), jnp.float32)
+        c["v_scale"] = jnp.zeros((*shape[:3], 1), jnp.float32)
+    return c
+
+
+def kv_cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                   lead=()):
+    shape = (*lead, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    c = {"k": jax.ShapeDtypeStruct(shape, _kv_dtype(cfg, dtype)),
+         "v": jax.ShapeDtypeStruct(shape, _kv_dtype(cfg, dtype)),
+         "slot_pos": jax.ShapeDtypeStruct((*lead, max_len), jnp.int32)}
+    if cfg.kv_quant_bits == 8:
+        c["k_scale"] = jax.ShapeDtypeStruct((*shape[:-1], 1), jnp.float32)
+        c["v_scale"] = jax.ShapeDtypeStruct((*shape[:-1], 1), jnp.float32)
+    return c
+
+
+def attention_decode(p, x, pos, cache, cfg: ModelConfig, *, lora=None,
+                     use_rope=True, prefix="", update_cache=True):
+    """One-token attention against a ring cache.
+
+    x: (B, 1, d); pos: scalar int32 absolute position.
+    Keys are stored already RoPE'd, so lookups need no re-rotation.
+    """
+    B = x.shape[0]
+    lo = lora or {}
+    g = lambda n: lo.get(prefix + n)
+    q = linear(x, p[prefix + "wq"], g("wq"), cfg=cfg).reshape(
+        B, 1, cfg.n_heads, cfg.head_dim)
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+    if update_cache:
+        k = linear(x, p[prefix + "wk"], g("wk"), cfg=cfg).reshape(
+            B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = linear(x, p[prefix + "wv"], g("wv"), cfg=cfg).reshape(
+            B, 1, cfg.n_kv_heads, cfg.head_dim)
+        if use_rope:
+            k = rope(k, pos, cfg.rope_theta)
+        quant = cfg.kv_quant_bits == 8 and "k_scale" in cache
+        kq, ks = quant_kv(k, quant)
+        vq, vs = quant_kv(v, quant)
+        max_len = cache["k"].shape[1]
+        slot = (pos % max_len).astype(jnp.int32)
+        upd = lambda buf, val: lax.dynamic_update_slice_in_dim(
+            buf, val.astype(buf.dtype), slot, axis=1)
+        new = {
+            "k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+            "slot_pos": lax.dynamic_update_slice_in_dim(
+                cache["slot_pos"], pos[None].astype(jnp.int32), slot,
+                axis=0),
+        }
+        if quant:
+            new["k_scale"] = upd(cache["k_scale"], ks)
+            new["v_scale"] = upd(cache["v_scale"], vs)
+        cache = new
+    out = kops.decode_attention(
+        q, dequant_kv(cache["k"], cache.get("k_scale"), x.dtype),
+        dequant_kv(cache["v"], cache.get("v_scale"), x.dtype),
+        cache["slot_pos"][None])
+    y = linear(out.reshape(B, 1, cfg.q_dim), p[prefix + "wo"], g("wo"),
+               cfg=cfg)
+    return y, cache
+
+
+# ------------------------------------------------------------------ mlp
+def init_mlp(rng, d: int, ff: int, kind: str, dtype):
+    ks = jax.random.split(rng, 3)
+    s = lambda fan_in: 1.0 / jnp.sqrt(fan_in)
+    p = {"wu": jax.random.normal(ks[0], (d, ff), dtype) * s(d),
+         "wd": jax.random.normal(ks[1], (ff, d), dtype) * s(ff)}
+    if kind == "swiglu":
+        p["wg"] = jax.random.normal(ks[2], (d, ff), dtype) * s(d)
+    return p
+
+
+def mlp_specs(d: int, ff: int, kind: str, dtype, lead=()):
+    f = lambda *sh: jax.ShapeDtypeStruct((*lead, *sh), dtype)
+    p = {"wu": f(d, ff), "wd": f(ff, d)}
+    if kind == "swiglu":
+        p["wg"] = f(d, ff)
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig, *, lora=None, kind=None):
+    kind = kind or cfg.mlp
+    lo = lora or {}
+    if kind == "swiglu":
+        h = jax.nn.silu(linear(x, p["wg"], lo.get("wg"), cfg=cfg)) * \
+            linear(x, p["wu"], lo.get("wu"), cfg=cfg)
+    else:
+        h = jax.nn.gelu(linear(x, p["wu"], lo.get("wu"), cfg=cfg))
+    return linear(h, p["wd"], lo.get("wd"), cfg=cfg)

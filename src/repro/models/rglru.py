@@ -1,0 +1,190 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence (per channel): a_t = exp(c · log σ(Λ) · r_t),
+h_t = a_t h_{t-1} + sqrt(1 − a_t²) · (i_t ⊙ x_t), with learned recurrence
+gate r_t and input gate i_t. The gate matrices are *block-diagonal*
+(Griffin's design — one block per head) which makes them shard-local.
+
+Distribution mirrors the Mamba block: under a Runtime the block runs in
+``shard_map`` with lru_width sharded over ``model``; the only cross-shard
+communication is the output-projection reduce(-scatter). Shares the chunked
+associative scan with the Mamba block (TPU-native; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import lora as lora_lib
+from repro.models import runtime as rt_lib
+from repro.models.ssm import chunked_linear_scan, _causal_conv, _lora_delta
+
+_C = 8.0
+GATE_BLOCKS = 16  # block-diagonal gate heads (w % 16 == 0 for all configs)
+
+
+def init_rglru(rng, cfg: ModelConfig, dtype):
+    d, w, K = cfg.d_model, cfg.lru_width or cfg.d_model, cfg.ssm_conv
+    gb = GATE_BLOCKS
+    wb = w // gb
+    ks = jax.random.split(rng, 6)
+    s = lambda fan: 1.0 / jnp.sqrt(fan)
+    return {
+        "wx": jax.random.normal(ks[0], (d, w), dtype) * s(d),
+        "wy": jax.random.normal(ks[1], (d, w), dtype) * s(d),
+        "conv_w": jax.random.normal(ks[2], (K, w), dtype) * s(K),
+        "w_rg": jax.random.normal(ks[3], (gb, wb, wb), dtype) * s(wb),
+        "w_ig": jax.random.normal(ks[4], (gb, wb, wb), dtype) * s(wb),
+        "lam": jnp.full((w,), 2.0, jnp.float32),      # σ(Λ) ≈ 0.88
+        "out_proj": jax.random.normal(ks[5], (w, d), dtype) * s(w),
+    }
+
+
+def rglru_specs(cfg: ModelConfig, dtype, lead=()):
+    d, w, K = cfg.d_model, cfg.lru_width or cfg.d_model, cfg.ssm_conv
+    gb = GATE_BLOCKS
+    wb = w // gb
+    f = lambda *sh, dt=dtype: jax.ShapeDtypeStruct((*lead, *sh), dt)
+    return {"wx": f(d, w), "wy": f(d, w), "conv_w": f(K, w),
+            "w_rg": f(gb, wb, wb), "w_ig": f(gb, wb, wb),
+            "lam": f(w, dt=jnp.float32), "out_proj": f(w, d)}
+
+
+def rglru_partition_specs(cfg: ModelConfig, tp_axis="model", lead=()):
+    nl = (None,) * len(lead)
+    return {"wx": P(*nl, None, tp_axis), "wy": P(*nl, None, tp_axis),
+            "conv_w": P(*nl, None, tp_axis),
+            "w_rg": P(*nl, tp_axis, None, None),
+            "w_ig": P(*nl, tp_axis, None, None),
+            "lam": P(*nl, tp_axis), "out_proj": P(*nl, tp_axis, None)}
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, dtype):
+    w, K = cfg.lru_width or cfg.d_model, cfg.ssm_conv
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, w), dtype)}
+
+
+def rglru_cache_specs(cfg: ModelConfig, batch: int, dtype, lead=()):
+    w, K = cfg.lru_width or cfg.d_model, cfg.ssm_conv
+    return {"h": jax.ShapeDtypeStruct((*lead, batch, w), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((*lead, batch, K - 1, w), dtype)}
+
+
+def _block_gate(wm, x32):
+    """Block-diagonal matmul: x (..., gb·wb) × wm (gb, wb, wb)."""
+    gb, wb, _ = wm.shape
+    xs = x32.reshape(*x32.shape[:-1], gb, wb)
+    return jnp.einsum("...gw,gwv->...gv", xs,
+                      wm.astype(jnp.float32)).reshape(x32.shape)
+
+
+def _gates(p, xc):
+    """(a_t, b_t) for the recurrence, from post-conv activations (f32)."""
+    x32 = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_gate(p["w_rg"], x32))
+    i = jax.nn.sigmoid(_block_gate(p["w_ig"], x32))
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    return a, b
+
+
+def _rglru_core(p, x, cfg: ModelConfig, h0, lo, *, shard=None):
+    """Returns (out_partial, cache); out needs reduction when sharded."""
+    B, S, _ = x.shape
+    dtype = x.dtype
+    alpha, rank = cfg.lora_alpha, cfg.lora_rank
+    w_l = p["wx"].shape[-1]
+    sl = None if shard is None else (shard[0] * w_l, w_l)
+    gate = jax.nn.gelu(x @ p["wy"].astype(dtype) +
+                       _lora_delta(x, lo.get("wy"), sl, alpha, rank))
+    val = x @ p["wx"].astype(dtype) + _lora_delta(
+        x, lo.get("wx"), sl, alpha, rank)
+    xc = _causal_conv(p["conv_w"], val, dtype)
+    a, b = _gates(p, xc)
+    if h0 is None:
+        h0 = jnp.zeros((B, w_l), jnp.float32)
+    chunk = S if cfg.calibrate else cfg.scan_chunk
+    h_all, h_last = chunked_linear_scan(a, b, h0, chunk)
+    y = h_all.astype(dtype) * gate
+    out = y @ p["out_proj"].astype(dtype)
+    if lo.get("out_proj") is not None:
+        aL = lo["out_proj"]["a"] if shard is None else \
+            lax.dynamic_slice_in_dim(lo["out_proj"]["a"], sl[0], w_l, 0)
+        hL = jnp.einsum("...k,kr->...r", y.astype(aL.dtype), aL)
+        out = out + (jnp.einsum("...r,rn->...n", hL, lo["out_proj"]["b"]) *
+                     (alpha / rank)).astype(dtype)
+    K = cfg.ssm_conv
+    tail = val[:, -(K - 1):, :] if S >= K - 1 else \
+        jnp.pad(val, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    return out, {"h": h_last, "conv": tail}
+
+
+def rglru_block(p, x, cfg: ModelConfig, *, lora=None, h0=None):
+    """x: (B, S, d) -> (y (B, S, d), cache)."""
+    from repro.core.quant import QTensor, maybe_dequantize
+    lo = lora or {}
+    rt = rt_lib.get_runtime()
+    B, S, _ = x.shape
+    w = cfg.lru_width or cfg.d_model
+    p = jax.tree.map(maybe_dequantize, p,
+                     is_leaf=lambda l: isinstance(l, QTensor))
+    if rt is None:
+        return _rglru_core(p, x, cfg, h0, lo)
+    mesh, m, tp, dp = rt.mesh, rt.tp_size, rt.tp_axis, rt.dp_axes
+    if w % m or GATE_BLOCKS % m or (B % rt.dp_size):
+        return _rglru_core(p, x, cfg, h0, lo)
+    pspec = rglru_partition_specs(cfg, tp)
+    p = {k: p[k] for k in pspec}          # layer dict may carry attn/mlp
+    lo = {k: v for k, v in lo.items() if k in ("wx", "wy", "out_proj")}
+    lspec = jax.tree.map(lambda _: P(), lo)
+    seq_out = tp if (cfg.seq_shard and S % m == 0 and S > 1) else None
+
+    @jax.checkpoint  # see models/ssm.py — remat inside the shard_map body
+    def fn(x_l, p_l, lo_l, h0_l):
+        r = lax.axis_index(tp)
+        if seq_out:
+            x_l = lax.all_gather(x_l, tp, axis=1, tiled=True)
+        out, cache = _rglru_core(p_l, x_l, cfg, h0_l, lo_l, shard=(r, m))
+        if seq_out:
+            out = lax.psum_scatter(out, tp, scatter_dimension=1, tiled=True)
+        else:
+            out = lax.psum(out, tp)
+        return out, cache
+
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(dp, seq_out, None), pspec, lspec,
+                  None if h0 is None else P(dp, tp)),
+        out_specs=(P(dp, seq_out, None),
+                   {"h": P(dp, tp), "conv": P(dp, None, tp)}),
+        check_vma=False)(x, p, lo, h0)
+
+
+def rglru_decode(p, x, cache, cfg: ModelConfig, *, lora=None):
+    """Single-token step. x: (B, 1, d). GSPMD execution (all ops small)."""
+    from repro.core.quant import QTensor, maybe_dequantize
+    p = jax.tree.map(maybe_dequantize, p,
+                     is_leaf=lambda l: isinstance(l, QTensor))
+    dtype = x.dtype
+    lo = lora or {}
+    alpha, rank = cfg.lora_alpha, cfg.lora_rank
+    gate = jax.nn.gelu(x[:, 0] @ p["wy"].astype(dtype) +
+                       _lora_delta(x[:, 0], lo.get("wy"), None, alpha, rank))
+    val = x[:, 0] @ p["wx"].astype(dtype) + _lora_delta(
+        x[:, 0], lo.get("wx"), None, alpha, rank)
+    window = jnp.concatenate(
+        [cache["conv"], val[:, None, :].astype(cache["conv"].dtype)], 1)
+    xc = jnp.einsum("bkd,kd->bd", window.astype(dtype),
+                    p["conv_w"].astype(dtype))
+    a, b = _gates(p, xc)
+    h = a * cache["h"] + b
+    y = h.astype(dtype) * gate
+    out = y @ p["out_proj"].astype(dtype)
+    if lo.get("out_proj") is not None:
+        out = out + _lora_delta(y, lo["out_proj"], None, alpha, rank)
+    return out[:, None, :], {"h": h, "conv": window[:, 1:, :]}

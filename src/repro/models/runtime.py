@@ -1,0 +1,64 @@
+"""Runtime distribution context.
+
+Model code is mesh-agnostic; when a mesh context is installed (by the
+launcher / dry-run), layers that have an *explicit* distributed
+implementation (MoE expert-parallel all-to-all, sequence-parallel residual
+constraints) use it. Without a context (unit tests, CPU examples)
+everything runs as plain local jnp.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Runtime:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...] = ("data",)   # client/data-parallel axes
+    tp_axis: str = "model"                 # tensor/expert-parallel axis
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= int(self.mesh.shape[a])
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.tp_axis])
+
+
+_CURRENT: list = [None]
+
+
+def set_runtime(rt: Optional[Runtime]) -> None:
+    _CURRENT[0] = rt
+
+
+def get_runtime() -> Optional[Runtime]:
+    return _CURRENT[0]
+
+
+@contextlib.contextmanager
+def runtime(rt: Optional[Runtime]):
+    prev = _CURRENT[0]
+    _CURRENT[0] = rt
+    try:
+        yield
+    finally:
+        _CURRENT[0] = prev
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint if a runtime mesh is installed, else no-op."""
+    rt = get_runtime()
+    if rt is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rt.mesh, P(*spec)))

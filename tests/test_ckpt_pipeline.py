@@ -1,0 +1,107 @@
+"""Checkpointing, data pipeline, double quantization."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (load_checkpoint, restore_fl_state, save_checkpoint,
+                        save_fl_state)
+from repro.core import quant as q
+from repro.data import pipeline as pl
+
+
+def test_checkpoint_roundtrip_plain(tmp_path, rng):
+    tree = {"a": jnp.asarray(rng.randn(4, 8), jnp.float32),
+            "nest": {"b": jnp.arange(5, dtype=jnp.int32)},
+            "lst": [jnp.ones((2,)), jnp.zeros((3,))]}
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, tree, extra={"round": 7})
+    back, extra = load_checkpoint(p, tree)
+    assert extra["round"] == 7
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_roundtrip_qtensor(tmp_path, rng):
+    w = jnp.asarray(rng.randn(128, 16), jnp.float32)
+    qt = q.quantize(w, bits=4, block=64, mode="nf4")
+    p = str(tmp_path / "ckq.npz")
+    save_checkpoint(p, {"w": qt})
+    back, _ = load_checkpoint(p, {"w": qt})
+    assert isinstance(back["w"], q.QTensor)
+    assert back["w"].bits == 4 and back["w"].mode == "nf4"
+    np.testing.assert_array_equal(np.asarray(qt.q), np.asarray(back["w"].q))
+    np.testing.assert_allclose(np.asarray(q.dequantize(qt)),
+                               np.asarray(q.dequantize(back["w"])))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    p = str(tmp_path / "ck.npz")
+    save_checkpoint(p, {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(p, {"a": jnp.ones((4,))})
+
+
+def test_fl_state_roundtrip(tmp_path, rng):
+    tr = {"adapter": jnp.asarray(rng.randn(8, 8), jnp.float32)}
+    p = str(tmp_path / "fl.npz")
+    save_fl_state(p, round_idx=12, global_trainable=tr,
+                  client_sizes=[10, 20])
+    tr2, opt2, rnd, sizes = restore_fl_state(p, like_trainable=tr)
+    assert rnd == 12 and sizes == [10, 20] and opt2 is None
+    np.testing.assert_array_equal(np.asarray(tr["adapter"]),
+                                  np.asarray(tr2["adapter"]))
+
+
+def test_dataset_epochs_cover_everything(rng):
+    data = {"x": np.arange(17), "y": np.arange(17) * 2}
+    ds = pl.ArrayDataset(data, seed=0)
+    seen = []
+    for b in ds.batches(4, epochs=1):
+        assert len(b["x"]) == 4
+        seen.extend(b["x"].tolist())
+    assert len(seen) == 16 and len(set(seen)) == 16  # drop-remainder
+
+
+def test_dataset_split_disjoint():
+    data = {"x": np.arange(100)}
+    a, b = pl.ArrayDataset(data).split([0.8, 0.2])
+    assert a.n == 80 and b.n == 20
+    assert not set(a.data["x"]) & set(b.data["x"])
+
+
+def test_client_streams_respect_partition():
+    data = {"x": np.arange(30)}
+    parts = [np.arange(0, 10), np.arange(10, 30)]
+    s0, s1 = pl.client_streams(data, parts, batch_size=4)
+    b0, b1 = next(s0), next(s1)
+    assert set(b0["x"]) <= set(range(10))
+    assert set(b1["x"]) <= set(range(10, 30))
+
+
+def test_prefetch_preserves_order():
+    out = list(pl.prefetch(iter([{"x": np.full((2,), i)}
+                                 for i in range(5)])))
+    assert [int(b["x"][0]) for b in out] == list(range(5))
+
+
+def test_double_quantization(rng):
+    w = jnp.asarray(rng.randn(512, 32), jnp.float32)
+    qt = q.quantize(w, bits=4, block=64)
+    dq = q.double_quantize(qt)
+    back = q.double_dequantize(dq)
+    # payload identical; scales within int8 error of the originals
+    np.testing.assert_array_equal(np.asarray(qt.q), np.asarray(back.q))
+    rel = float(jnp.abs(qt.scales - back.scales).max() /
+                (jnp.abs(qt.scales).max() + 1e-12))
+    assert rel < 0.02
+    # end-to-end weight error stays close to single quantization
+    e1 = float(jnp.abs(w - q.dequantize(qt)).max())
+    e2 = float(jnp.abs(w - q.dequantize(back)).max())
+    assert e2 < 1.25 * e1 + 1e-4
+    # and it actually saves bytes vs f32 scales
+    f32_scale_bytes = qt.scales.size * 4
+    dq_scale_bytes = q.double_quant_bytes(dq) - qt.q.size
+    assert dq_scale_bytes < f32_scale_bytes / 2

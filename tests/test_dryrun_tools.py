@@ -1,0 +1,60 @@
+"""Dry-run tooling: HLO collective parser and roofline term math."""
+import pytest
+
+from repro.launch.dryrun import parse_collectives
+
+HLO = """
+  %ag = f32[16,4096]{1,0} all-gather(%x), channel_id=1, replica_groups=[16,16]<=[256], dimensions={0}
+  %ar.1 = (bf16[128,64]{1,0}, bf16[128,64]{1,0}) all-reduce(%a, %b), replica_groups={{0,1,2,3}}, to_apply=%add
+  %a2a = s8[2,24,7168]{2,1,0} all-to-all(%y), channel_id=3, replica_groups=[32,16]<=[512]
+  %rs = f32[8,8]{1,0} reduce-scatter(%z), channel_id=4, replica_groups=[16,16]<=[256], dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%w), channel_id=5, source_target_pairs={{0,1}}
+  %notacoll = f32[4,4]{1,0} add(%p, %q)
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = parse_collectives(HLO)
+    assert set(st) == {"all-gather", "all-reduce", "all-to-all",
+                       "reduce-scatter", "collective-permute"}
+    assert st["all-gather"]["bytes"] == 16 * 4096 * 4
+    assert st["all-gather"]["gsize"] == 16
+    assert st["all-reduce"]["bytes"] == 2 * 128 * 64 * 2
+    assert st["all-reduce"]["gsize"] == 4
+    assert st["all-to-all"]["bytes"] == 2 * 24 * 7168 * 1
+    assert st["all-to-all"]["gsize"] == 16
+    assert st["reduce-scatter"]["count"] == 1
+    assert st["collective-permute"]["bytes"] == 4 * 4 * 2
+
+
+def test_roofline_terms_math():
+    from benchmarks.roofline import HBM_BW, PEAK_FLOPS, terms
+    rec = {"n_devices": 256, "hlo_flops": 0.0, "hlo_bytes": 0.0,
+           "hlo_flops_cal": PEAK_FLOPS, "hlo_bytes_cal": HBM_BW,
+           "collectives_cal": {"all-gather": {"bytes": 50e9, "gsize": 16,
+                                              "count": 1}},
+           "collectives": {}, "params_active": 1_000_000,
+           "global_batch": 2, "seq_len": 4, "kind": "train",
+           "argument_bytes": 2**30, "output_bytes": 0, "temp_bytes": 0}
+    t = terms(rec)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 15 / 16) < 1e-6
+    assert t["dominant"] == "compute"
+    assert abs(t["model_flops"] - 6 * 1e6 * 8) < 1
+    assert abs(t["hbm_gib"] - 1.0) < 1e-6
+
+
+def test_moe_int8_dispatch_local_noop(rng):
+    """moe_dispatch_bits only affects the distributed path; the local
+    path (no mesh) is unchanged."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_reduced
+    from repro.models import moe as moe_lib
+    cfg = get_reduced("qwen3-moe-235b-a22b").replace(capacity_factor=8.0)
+    p = moe_lib.init_experts(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(2, 4, cfg.d_model) * 0.2, jnp.float32)
+    y0, _ = moe_lib.moe_ffn(p, x, cfg)
+    y1, _ = moe_lib.moe_ffn(p, x, cfg.replace(moe_dispatch_bits=8))
+    assert float(jnp.abs(y0 - y1).max()) == 0.0

@@ -1,0 +1,96 @@
+"""Federated runtime: partition invariants (hypothesis), aggregation
+semantics, communication compression, and a full round."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import QTensor, quantize_tree, tree_bytes
+from repro.fl import partition, server
+from repro.fl.strategies import STRATEGIES
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.floats(0.05, 10.0), st.integers(0, 100))
+def test_dirichlet_partition_preserves_samples(n_clients, alpha, seed):
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(0, 5, 120)
+    parts = partition.dirichlet_partition(labels, n_clients, alpha,
+                                          seed=seed)
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)  # disjoint, complete
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 50))
+def test_dirichlet_low_alpha_is_skewed(seed):
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(0, 4, 400)
+    skewed = partition.dirichlet_partition(labels, 4, 0.05, seed=seed)
+    uniform = partition.dirichlet_partition(labels, 4, 100.0, seed=seed)
+
+    def skewness(parts):
+        h = [partition.class_histogram(labels, p, 4) + 1e-9 for p in parts]
+        h = [x / x.sum() for x in h if x.sum() > 1]
+        return np.mean([-(x * np.log(x)).sum() for x in h])
+    assert skewness(skewed) < skewness(uniform)
+
+
+def test_domain_partition_disjoint():
+    rng = np.random.RandomState(0)
+    domains = rng.randint(0, 4, 200)
+    parts = partition.domain_partition(domains, 4, seed=0)
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == len(allidx)
+
+
+def test_aggregate_is_weighted_mean():
+    g = {"w": jnp.zeros((4,))}
+    d1 = {"w": jnp.ones((4,))}
+    d2 = {"w": 3 * jnp.ones((4,))}
+    out = server.aggregate(g, [(1, d1), (3, d2)])
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5)  # (1·1+3·3)/4
+
+
+def test_aggregate_identity_updates():
+    g = {"w": jnp.asarray([1.0, 2.0])}
+    d = {"w": jnp.asarray([0.5, -0.5])}
+    out = server.aggregate(g, [(5, d), (5, d)])
+    np.testing.assert_allclose(np.asarray(out["w"]), [1.5, 1.5])
+
+
+def test_aggregate_quantized_updates(rng):
+    g = {"w": jnp.zeros((128, 16))}
+    delta = {"w": jnp.asarray(rng.randn(128, 16) * 0.01, jnp.float32)}
+    qd = quantize_tree(delta, bits=8, block=64, min_size=16)
+    assert isinstance(qd["w"], QTensor)
+    out = server.aggregate(g, [(1, qd)])
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(delta["w"]), atol=1e-3)
+
+
+def test_comm_compression_ratio(rng):
+    delta = {"w": jnp.asarray(rng.randn(256, 64), jnp.float32)}
+    full = tree_bytes(delta)
+    q8 = tree_bytes(quantize_tree(delta, bits=8, block=64, min_size=16))
+    q4 = tree_bytes(quantize_tree(delta, bits=4, block=64, min_size=16))
+    assert q8 < full / 3 and q4 < full / 6
+
+
+def test_one_federated_round_improves_loss():
+    from repro.fl.simulator import FLConfig, run_federated
+    h = run_federated(FLConfig(
+        dataset="pacs", strategy="qlora_nogan", n_clients=2, rounds=3,
+        local_steps=4, n_per_class=16, batch_size=16, lr=3e-3))
+    assert h.server_loss[-1] < h.server_loss[0]
+    assert len(h.client_loss) == 3 and len(h.client_loss[0]) == 2
+    assert all(b > 0 for b in h.uplink_bytes)
+
+
+def test_strategy_arms_registered():
+    assert set(STRATEGIES) == {"fedclip", "qlora_nogan", "tripleplay"}
+    assert STRATEGIES["tripleplay"].use_gan
+    assert STRATEGIES["qlora_nogan"].backbone_bits == 4
+    assert not STRATEGIES["fedclip"].use_lora

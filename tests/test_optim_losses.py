@@ -1,0 +1,67 @@
+"""Optimizer and loss substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses, optim
+
+
+def test_adam_minimizes_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = optim.adam_init(params)
+    for _ in range(300):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        params, state = optim.adam_update(g, state, params, lr=5e-2)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    params = {"x": jnp.zeros((4,))}
+    state = optim.adam_init(params)
+    g = {"x": jnp.full((4,), 1e6)}
+    p2, _ = optim.adam_update(g, state, params, lr=1.0, grad_clip=1.0)
+    assert float(jnp.abs(p2["x"]).max()) < 10.0
+
+
+def test_cosine_schedule_endpoints():
+    s = optim.cosine_schedule(1.0, warmup=10, total=100)
+    assert float(s(jnp.asarray(0.0))) == 0.0
+    assert abs(float(s(jnp.asarray(10.0))) - 1.0) < 1e-6
+    assert float(s(jnp.asarray(100.0))) < 1e-6
+
+
+def test_cross_entropy_matches_manual(rng):
+    logits = jnp.asarray(rng.randn(5, 7), jnp.float32)
+    labels = jnp.asarray(rng.randint(0, 7, 5), jnp.int32)
+    want = -np.take_along_axis(
+        np.asarray(jax.nn.log_softmax(logits)),
+        np.asarray(labels)[:, None], 1).mean()
+    got = float(losses.cross_entropy(logits, labels))
+    assert abs(got - want) < 1e-5
+
+
+def test_cross_entropy_mask(rng):
+    logits = jnp.asarray(rng.randn(4, 6, 9), jnp.float32)
+    labels = jnp.zeros((4, 6), jnp.int32)
+    m = jnp.zeros((4, 6)).at[:, 0].set(1.0)
+    full = losses.cross_entropy(logits[:, :1], labels[:, :1])
+    masked = losses.cross_entropy(logits, labels, m)
+    assert abs(float(full) - float(masked)) < 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_contrastive_loss_symmetric_identity(seed):
+    """Perfectly aligned pairs achieve lower loss than mismatched."""
+    rng = np.random.RandomState(seed)
+    e = jnp.asarray(rng.randn(6, 8), jnp.float32)
+    scale = jnp.asarray(2.0)
+    aligned = float(losses.clip_contrastive(e, e, scale))
+    shuffled = float(losses.clip_contrastive(e, e[::-1], scale))
+    assert aligned < shuffled
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert abs(float(optim.global_norm(t)) - 5.0) < 1e-6

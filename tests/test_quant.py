@@ -1,0 +1,94 @@
+"""Blockwise quantization (§III-C substrate): exactness, error bounds,
+tree filtering — including hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as q
+
+
+@pytest.mark.parametrize("bits,mode", [(8, "linear"), (4, "linear"),
+                                       (4, "nf4")])
+@pytest.mark.parametrize("shape", [(128, 64), (256, 30), (3, 128, 16)])
+def test_roundtrip_error_bound(bits, mode, shape, rng):
+    x = jnp.asarray(rng.randn(*shape), jnp.float32)
+    qt = q.quantize(x, bits=bits, block=64, mode=mode)
+    xd = q.dequantize(qt)
+    assert xd.shape == x.shape
+    # per-block absmax bounds the error: linear-int: s/2; nf4: widest gap
+    blocks = x.reshape(*shape[:-2], shape[-2] // 64, 64, shape[-1])
+    absmax = jnp.max(jnp.abs(blocks), axis=-2, keepdims=True)
+    levels = {8: 254, 4: 14}[bits]
+    tol = absmax / (levels / 2) if mode == "linear" else absmax * 0.16
+    err = jnp.abs((x - xd).reshape(blocks.shape))
+    assert bool(jnp.all(err <= tol + 1e-6)), float((err - tol).max())
+
+
+def test_pack_unpack_exact(rng):
+    v = jnp.asarray(rng.randint(-8, 8, (4, 64, 8)), jnp.int8)
+    assert bool(jnp.all(q.unpack4(q.pack4(v)) == v))
+
+
+def test_int4_packed_is_half_size(rng):
+    x = jnp.asarray(rng.randn(256, 64), jnp.float32)
+    q8 = q.quantize(x, bits=8, block=128)
+    q4 = q.quantize(x, bits=4, block=128)
+    assert q4.q.size * 2 == q8.q.size
+    assert q4.q.dtype == jnp.uint8
+
+
+def test_quantize_tree_filters(rng):
+    tree = {"layers": {"wq": jnp.asarray(rng.randn(128, 128), jnp.float32),
+                       "ln1": jnp.zeros((128,)),
+                       "router": jnp.asarray(rng.randn(128, 64))},
+            "embed": jnp.asarray(rng.randn(128, 128))}
+    out = q.quantize_tree(tree, bits=4, block=64)
+    assert isinstance(out["layers"]["wq"], q.QTensor)
+    assert not isinstance(out["layers"]["ln1"], q.QTensor)
+    assert not isinstance(out["layers"]["router"], q.QTensor)
+    assert not isinstance(out["embed"], q.QTensor)
+
+
+def test_tree_bytes_counts_packed(rng):
+    x = jnp.asarray(rng.randn(256, 128), jnp.float32)
+    full = q.tree_bytes({"w": x})
+    qt4 = q.tree_bytes({"w": q.quantize(x, bits=4, block=128)})
+    assert qt4 < full / 6  # ~4 bit + scales vs 32 bit
+
+
+def test_specs_match_real(rng):
+    x = jnp.asarray(rng.randn(256, 96), jnp.float32)
+    for bits, mode in [(8, "linear"), (4, "nf4")]:
+        qt = q.quantize(x, bits=bits, block=128, mode=mode)
+        sp = q.qtensor_specs(x.shape, x.dtype, bits=bits, block=128,
+                             mode=mode)
+        assert sp.q.shape == qt.q.shape and sp.q.dtype == qt.q.dtype
+        assert sp.scales.shape == qt.scales.shape
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 6), st.sampled_from([8, 4]),
+       st.floats(0.01, 100.0))
+def test_property_roundtrip_scale_invariance(gmult, n, bits, scale):
+    """Quantization commutes (approximately) with positive scaling and the
+    error never exceeds one quantization step per block."""
+    rng = np.random.RandomState(gmult * 7 + n)
+    K = 64 * gmult
+    x = jnp.asarray(rng.randn(K, n) * scale, jnp.float32)
+    qt = q.quantize(x, bits=bits, block=64)
+    xd = q.dequantize(qt)
+    step = qt.scales.max() * (1.0 if bits == 8 else 1.0)
+    assert float(jnp.abs(x - xd).max()) <= float(step) + 1e-6
+    assert bool(jnp.all(qt.scales > 0))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000))
+def test_property_dequant_deterministic(seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(128, 8), jnp.float32)
+    a = q.dequantize(q.quantize(x, bits=4, block=64, mode="nf4"))
+    b = q.dequantize(q.quantize(x, bits=4, block=64, mode="nf4"))
+    assert bool(jnp.all(a == b))
