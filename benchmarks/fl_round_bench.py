@@ -1,0 +1,127 @@
+"""Round-time benchmark: sequential per-client loop vs the batched
+cohort engine (fl.cohort), across cohort sizes.
+
+Measures steady-state (post-compile) mean round time for
+``n_clients in {2, 8, 32}`` on two arms — fedclip (adapter-only, where
+staging lets the engine hoist the whole frozen backbone out of the
+training loop) and qlora_nogan (adapter + LoRA + int8 uplink
+quantization, where only the patch embedding hoists) — and writes
+``BENCH_fl_round.json`` at the repo root so the perf trajectory is
+tracked from this PR onward. Both paths compute the same local-training
+math (see the cohort-vs-sequential parity tests).
+
+REPRO_BENCH_SCALE=quick (default) times 3 rounds per point; =paper 10.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clip as clip_lib
+from repro.data.synthetic import class_tokens, make_dataset
+from repro.fl import client as client_lib
+from repro.fl import cohort as cohort_lib
+from repro.fl import partition, server
+from repro.fl.strategies import STRATEGIES
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+N_CLIENTS = (2, 8, 32)
+LOCAL_STEPS = 6
+BATCH = 32
+LR = 3e-3
+ROUNDS = {"quick": 3, "paper": 10}[
+    os.environ.get("REPRO_BENCH_SCALE", "quick")]
+
+
+def _setup(arm: str, n_clients: int):
+    strat = STRATEGIES[arm]
+    ccfg = clip_lib.CLIPConfig()
+    frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+    data = make_dataset("pacs", n_per_class=60, seed=0,
+                        longtail_gamma=8.0)
+    spec = data["spec"]
+    class_emb = clip_lib.text_embedding(
+        frozen, ccfg,
+        jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+    parts = partition.dirichlet_partition(data["labels"], n_clients, 0.5,
+                                          seed=0)
+    # participation = clients that actually hold data (high client counts
+    # leave some Dirichlet shards empty; neither path can train on zero
+    # samples)
+    clients = [client_lib.Client(
+        cid=i, images=data["images"][idx], labels=data["labels"][idx],
+        n_classes=spec.n_classes, strategy=strat)
+        for i, idx in enumerate(parts) if len(idx) > 0]
+    tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg, strat)
+    return strat, ccfg, frozen, class_emb, clients, tr
+
+
+def time_sequential(frozen, tr, class_emb, ccfg, clients) -> float:
+    def one_round(tr, rnd):
+        updates = []
+        for i, c in enumerate(clients):
+            after, _ = c.local_train(frozen, tr, class_emb, ccfg,
+                                     steps=LOCAL_STEPS, batch_size=BATCH,
+                                     lr=LR, seed=rnd * 100 + i)
+            upd, _ = c.make_update(tr, after)
+            updates.append((c.n, upd))
+        return server.aggregate(tr, updates)
+
+    tr = jax.block_until_ready(one_round(tr, 999))      # compile/warmup
+    t0 = time.perf_counter()
+    for rnd in range(ROUNDS):
+        tr = one_round(tr, rnd)
+    jax.block_until_ready(tr)
+    return (time.perf_counter() - t0) / ROUNDS
+
+
+def time_cohort(strat, frozen, tr, class_emb, ccfg, clients) -> float:
+    engine = cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(strategy=strat,
+                                    local_steps=LOCAL_STEPS,
+                                    batch_size=BATCH, lr=LR))
+    key = jax.random.PRNGKey(0)
+    tr = jax.tree.map(jnp.copy, tr)      # run_round donates its input
+    tr, _ = engine.run_round(tr, jax.random.fold_in(key, 999))  # warmup
+    jax.block_until_ready(tr)
+    t0 = time.perf_counter()
+    for rnd in range(ROUNDS):
+        tr, _ = engine.run_round(tr, jax.random.fold_in(key, rnd))
+    jax.block_until_ready(tr)
+    return (time.perf_counter() - t0) / ROUNDS
+
+
+def main():
+    results = {"config": {"local_steps": LOCAL_STEPS, "batch": BATCH,
+                          "rounds_timed": ROUNDS,
+                          "backend": jax.default_backend()},
+               "points": []}
+    for arm in ("fedclip", "qlora_nogan"):
+        for n in N_CLIENTS:
+            strat, ccfg, frozen, class_emb, clients, tr = _setup(arm, n)
+            seq = time_sequential(frozen, tr, class_emb, ccfg, clients)
+            coh = time_cohort(strat, frozen, tr, class_emb, ccfg,
+                              clients)
+            point = {"strategy": arm, "n_clients": n,
+                     "n_clients_effective": len(clients),
+                     "sequential_round_s": seq, "cohort_round_s": coh,
+                     "speedup": seq / coh}
+            results["points"].append(point)
+            print(f"{arm:12s} n_clients={n:3d} ({len(clients):3d} with "
+                  f"data)  sequential={seq*1e3:8.1f} ms  "
+                  f"cohort={coh*1e3:7.1f} ms  speedup={seq/coh:5.1f}x")
+    out = ROOT / "BENCH_fl_round.json"
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full unit suite, then a 2-client/2-round cohort-engine
+# smoke run through the public simulator entry point.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF'
+from repro.fl.simulator import FLConfig, run_federated
+
+h = run_federated(FLConfig(
+    dataset="pacs", strategy="tripleplay", n_clients=2, rounds=2,
+    local_steps=3, n_per_class=12, batch_size=8, gan_steps=30,
+    lr=3e-3))
+assert h.meta["engine"] == "cohort"
+assert len(h.client_loss) == 2 and len(h.client_loss[0]) == 2
+assert all(b > 0 for b in h.uplink_bytes)
+print("cohort smoke run OK:", {"server_loss": h.server_loss,
+                               "uplink_bytes": h.uplink_bytes})
+EOF

@@ -121,15 +121,30 @@ def patchify(images, patch):
     return x.transpose(0, 1, 3, 2, 4, 5).reshape(B, gh * gw, -1)
 
 
-def encode_image(params, cfg: CLIPConfig, images, *, lora=None,
-                 pool: bool = True):
+def embed_patches(params, cfg: CLIPConfig, images):
+    """(B, H, W, C) -> (B, n_patches + 1, d) embedded tokens (patch
+    projection + cls + positions). Trainable-independent: LoRA/adapters
+    never touch it, so batched executors hoist it out of training loops
+    (computed once per staged data pool)."""
     v = params["vision"]
     x = patchify(images, cfg.patch) @ v["patch_embed"]
     cls = jnp.broadcast_to(v["cls"], (x.shape[0], 1, cfg.d_model))
-    x = jnp.concatenate([cls, x], axis=1) + v["pos"][None]
+    return jnp.concatenate([cls, x], axis=1) + v["pos"][None]
+
+
+def encode_tokens(params, cfg: CLIPConfig, x, *, lora=None,
+                  pool: bool = True):
+    """Vision tower over pre-embedded tokens from ``embed_patches``."""
+    v = params["vision"]
     x = _run_blocks(v["blocks"], x, cfg.n_heads, False, lora)
     x = _ln(x, v["ln"])
     return x[:, 0] if pool else x            # cls token
+
+
+def encode_image(params, cfg: CLIPConfig, images, *, lora=None,
+                 pool: bool = True):
+    return encode_tokens(params, cfg, embed_patches(params, cfg, images),
+                         lora=lora, pool=pool)
 
 
 def encode_text(params, cfg: CLIPConfig, tokens):

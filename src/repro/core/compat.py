@@ -1,0 +1,20 @@
+"""JAX version compatibility shims.
+
+``shard_map`` was promoted from ``jax.experimental.shard_map`` to
+``jax.shard_map`` in newer JAX; this container runs 0.4.x. Import it
+from here so every caller works on both.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:      # jax<=0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *args, **kwargs):
+        # the replication-check kwarg was renamed check_rep -> check_vma
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, *args, **kwargs)

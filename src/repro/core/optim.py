@@ -61,6 +61,31 @@ def adam_update(grads, state: AdamState, params, *, lr, b1=0.9, b2=0.999,
     return new_params, AdamState(step, mu, nu)
 
 
+def adam_scan(grad_fn, params, state: AdamState, xs, *, lr, b1=0.9,
+              b2=0.999, eps=1e-8, weight_decay=0.0, grad_clip=0.0,
+              unroll=1):
+    """Fused local-training loop: one ``adam_update`` per leading element
+    of ``xs``, inside a single ``lax.scan`` — the scan-friendly form used
+    by the cohort engine and the CLIP pretraining loop, so a whole
+    optimisation run is one XLA program (jit/donation-friendly, and the
+    ``(params, state)`` carry buffers are reused in place on device).
+
+    ``grad_fn(params, x) -> (grads, aux)``; returns
+    ``(params, state, aux_stacked)`` where each adam_update step matches
+    the Python-loop semantics of calling ``adam_update`` per batch.
+    """
+    def body(carry, x):
+        p, s = carry
+        g, aux = grad_fn(p, x)
+        p, s = adam_update(g, s, p, lr=lr, b1=b1, b2=b2, eps=eps,
+                           weight_decay=weight_decay, grad_clip=grad_clip)
+        return (p, s), aux
+
+    (params, state), aux = jax.lax.scan(body, (params, state), xs,
+                                        unroll=unroll)
+    return params, state, aux
+
+
 def sgd_update(grads, params, *, lr):
     return jax.tree.map(
         lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)

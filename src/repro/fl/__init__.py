@@ -1,2 +1,3 @@
 # Federated-learning runtime: partitioning, clients, server aggregation,
-# the paper's three strategy arms, and the round simulator.
+# the paper's three strategy arms, the batched cohort execution engine
+# (cohort.py — vmap/scan-fused rounds), and the round simulator.

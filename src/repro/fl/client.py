@@ -51,14 +51,21 @@ def init_trainable(rng, ccfg: clip_lib.CLIPConfig, strategy: Strategy):
     return tr
 
 
-def forward_logits(frozen, trainable, ccfg, images, class_emb):
-    """images -> zero-shot class logits through backbone+adapter."""
-    lora = trainable.get("lora")
-    feat = clip_lib.encode_image(frozen, ccfg, images, lora=lora)
+def head_logits(frozen, trainable, feat, class_emb):
+    """Pooled backbone features -> zero-shot class logits through the
+    trainable adapter head (the part of the forward that always depends
+    on trainables; the cohort engine feeds it hoisted features)."""
     feat = adapter_lib.apply(trainable["adapter"], feat[:, None, :],
                              n_heads=4, causal=False)[:, 0]
     emb = feat @ frozen["proj_v"]
     return clip_lib.zero_shot_logits(emb, class_emb, frozen["logit_scale"])
+
+
+def forward_logits(frozen, trainable, ccfg, images, class_emb):
+    """images -> zero-shot class logits through backbone+adapter."""
+    lora = trainable.get("lora")
+    feat = clip_lib.encode_image(frozen, ccfg, images, lora=lora)
+    return head_logits(frozen, trainable, feat, class_emb)
 
 
 @partial(jax.jit, static_argnums=(5,))
@@ -117,21 +124,36 @@ class Client:
         self.aug_images = np.asarray(imgs, np.float32)
         self.aug_labels = need
 
-    def _pool(self):
+    def pool(self):
+        """Local training pool: real samples + GAN rebalancing set."""
         if self.strategy.use_gan and self.aug_images is not None and \
                 len(self.aug_labels):
             return (np.concatenate([self.images, self.aug_images]),
                     np.concatenate([self.labels, self.aug_labels]))
         return self.images, self.labels
 
+    _pool = pool  # backwards-compat alias
+
     def local_train(self, frozen, trainable, class_emb, ccfg, *,
-                    steps: int, batch_size: int, lr: float, seed: int):
-        rng = np.random.RandomState(seed)
-        imgs, labs = self._pool()
+                    steps: int, batch_size: int, lr: float, seed: int = 0,
+                    indices: Optional[np.ndarray] = None):
+        """Sequential reference path (one jitted step per batch).
+
+        ``indices`` — optional (steps, batch) pool-index matrix. When
+        given it replaces the seeded np.RandomState sampling, letting the
+        batched cohort engine's jax.random sample sequence drive this
+        path as the parity-test oracle.
+        """
+        imgs, labs = self.pool()
+        if indices is None:
+            rng = np.random.RandomState(seed)
+            # full batch_size even when the pool is smaller (bootstrap
+            # resampling) — the cohort engine needs fixed shapes, and
+            # both engines must share one sampling semantic
+            indices = rng.randint(0, len(labs), (steps, batch_size))
         opt = optim.adam_init(trainable)
         loss = acc = 0.0
-        for _ in range(steps):
-            idx = rng.randint(0, len(labs), min(batch_size, len(labs)))
+        for idx in np.asarray(indices):
             trainable, opt, loss, acc = _local_step(
                 frozen, trainable, opt,
                 (jnp.asarray(imgs[idx]), jnp.asarray(labs[idx])),
@@ -143,8 +165,5 @@ class Client:
         (update_tree, payload_bytes)."""
         delta = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32),
                              after, before)
-        if self.strategy.comm_bits:
-            delta = quantize_tree(delta, bits=self.strategy.comm_bits,
-                                  block=64, min_size=256,
-                                  skip_names=("slot",))
+        delta = self.strategy.comm_quantize(delta)
         return delta, tree_bytes(delta)

@@ -1,0 +1,264 @@
+"""Batched cohort execution engine: vmap/scan-fused federated rounds.
+
+The sequential simulator runs each round as a Python loop over clients
+with one jitted step per local batch — O(n_clients * local_steps) device
+dispatches plus a host->device transfer per step. But with a frozen,
+shared backbone and a tiny trainable tree, every client's local training
+is the *same program over different data and trainable state*, which is
+exactly the shape ``jax.vmap`` (over the cohort) + ``jax.lax.scan`` (over
+local steps) compile into one fused device program.
+
+This engine therefore executes an entire federated round — local Adam
+training for every selected client, delta computation, per-client uplink
+quantization, and weighted FedAvg aggregation — as **one jitted,
+buffer-donated call**:
+
+ - client trainables are stacked along a leading cohort axis (every
+   client starts a round from the global trainables, so the stack is a
+   broadcast);
+ - each client's (GAN-rebalanced) data pool is staged on device once,
+   zero-padded to a fixed shape (n_clients, P, ...) so shapes never
+   recompile — and staging hoists every trainable-independent prefix of
+   the forward to a one-time cost: pools are stored as pooled backbone
+   features (adapter-only arms) or embedded patch tokens (LoRA arms),
+   so local steps never re-run frozen computation the sequential
+   interpreter redoes per batch;
+ - per-step batch indices are drawn with ``jax.random`` in one small
+   dedicated dispatch per round on replicated inputs (padding rows are
+   never sampled: indices live in [0, pool_len)) and fed to the fused
+   round as data, keeping the draw independent of the mesh layout;
+ - uplink compression reuses the exact blockwise layout of the
+   sequential path (quantization blocks run along trailing dims, so the
+   stacked quantization is elementwise-identical to quantizing each
+   client's delta separately);
+ - with a mesh, the staged cohort arrays are sharded over the
+   data-parallel axes (``launch.mesh.cohort_sharding``) and pjit splits
+   the vmapped round across devices.
+
+The sequential ``Client.local_train`` path stays alive as the reference
+oracle; ``round_indices`` reproduces the engine's sample sequence so
+parity tests can drive both paths with identical batches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clip as clip_lib
+from repro.core import losses, optim, quant
+from repro.core.quant import tree_bytes
+from repro.data.synthetic import stage_client_pools
+from repro.fl import client as client_lib
+from repro.fl import server
+from repro.fl import strategies as strategies_lib
+from repro.fl.strategies import Strategy
+from repro.launch import mesh as mesh_lib
+
+
+@dataclass(frozen=True)
+class CohortConfig:
+    """Static round-execution parameters (baked into the jitted round)."""
+    strategy: Strategy
+    local_steps: int
+    batch_size: int
+    lr: float
+    mesh: Any = None          # optional Mesh: shard cohort over dp axes
+    donate: bool = True       # donate the global-trainable buffers
+
+
+def sample_batch_indices(key, lens, steps: int, batch: int):
+    """(n_clients, steps, batch) pool indices, client i's in
+    [0, lens[i]). The engine draws these in a dedicated small dispatch on
+    *replicated* inputs — never inside the sharded round program, where
+    non-partitionable threefry would make the draw depend on the mesh
+    layout — so ``round_indices`` (the eager form driving the sequential
+    oracle) reproduces the engine's batches exactly on any mesh."""
+    keys = jax.random.split(key, lens.shape[0])
+    return jax.vmap(
+        lambda k, n: jax.random.randint(k, (steps, batch), 0, n))(
+            keys, lens)
+
+
+def round_indices(key, lens, steps: int, batch: int) -> np.ndarray:
+    """Host-side view of one round's per-client batch indices."""
+    return np.asarray(sample_batch_indices(
+        key, jnp.asarray(lens, jnp.int32), steps, batch))
+
+
+def comm_quantize_stacked(delta, strategy: Strategy):
+    """Uplink-quantize a stacked delta tree (leading cohort axis) with
+    semantics identical to each client quantizing its own delta:
+    eligibility and block choice use the *per-client* leaf shape, and the
+    blockwise absmax runs along trailing dims only, so the leading axis
+    is inert."""
+    if not strategy.comm_bits:
+        return delta
+    flat, treedef = jax.tree_util.tree_flatten_with_path(delta)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(k) for k in path)
+        per_client = leaf.shape[1:]
+        if not quant._quantizable(pstr, per_client, leaf.dtype,
+                                  strategies_lib.COMM_MIN_SIZE,
+                                  strategies_lib.COMM_SKIP):
+            out.append(leaf)
+            continue
+        b = quant._pick_block(per_client[-2], strategies_lib.COMM_BLOCK)
+        bits, mode = strategy.comm_bits, "linear"
+        if b % 2:
+            bits, mode = 8, "linear"
+        out.append(quant.quantize(leaf, bits=bits, block=b, mode=mode))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CohortEngine:
+    """One-dispatch-per-round federated executor.
+
+    Built once per simulation from the instantiated clients; ``run_round``
+    then advances the global trainables with a single jitted call
+    returning per-client last-step loss/acc.
+    """
+
+    def __init__(self, *, frozen, ccfg, class_emb,
+                 clients: Sequence[client_lib.Client], cfg: CohortConfig):
+        self.cfg = cfg
+        self.n_clients = len(clients)
+        empty = [c.cid for c in clients if len(c.pool()[1]) == 0]
+        if empty:
+            raise ValueError(
+                f"clients {empty} have empty pools; federated rounds "
+                "(sequential or cohort) need every participant to hold "
+                "data — drop them from the cohort")
+        imgs, labs, lens = stage_client_pools([c.pool() for c in clients])
+        weights = np.asarray([c.n for c in clients], np.float32)
+        weights = weights / weights.sum()
+
+        if cfg.mesh is not None:
+            shards = mesh_lib.cohort_axis_size(cfg.mesh)
+            if self.n_clients % shards:
+                raise ValueError(
+                    f"cohort of {self.n_clients} clients not divisible by "
+                    f"the mesh's {shards} data-parallel shards")
+            put = lambda x: jax.device_put(
+                x, mesh_lib.cohort_sharding(cfg.mesh, np.ndim(x)))
+        else:
+            put = jnp.asarray
+
+        # Hoist every trainable-independent prefix of the forward out of
+        # the training loop — staging the pool once per engine makes this
+        # a one-time cost instead of a per-step one:
+        #  - no LoRA: the whole frozen backbone; the pool is stored as
+        #    pooled features (C, P, d) and local steps train only the
+        #    adapter head;
+        #  - with LoRA: the patch embedding (+cls+pos), which LoRA never
+        #    touches; the pool is stored as embedded tokens
+        #    (C, P, S, d).
+        C, P = labs.shape
+        flat_imgs = jnp.asarray(imgs.reshape(C * P, *imgs.shape[2:]))
+        stage = jax.jit(
+            (lambda x: clip_lib.embed_patches(frozen, ccfg, x))
+            if cfg.strategy.use_lora else
+            (lambda x: clip_lib.encode_image(frozen, ccfg, x)))
+        staged = jnp.concatenate(
+            [stage(flat_imgs[i:i + 512])
+             for i in range(0, C * P, 512)])
+        self.pool_staged = put(staged.reshape(C, P, *staged.shape[1:]))
+        self.pool_labs = put(labs)
+        self.lens = jnp.asarray(lens, jnp.int32)
+        self.weights = jnp.asarray(weights, jnp.float32)
+        self.frozen = frozen
+        self.class_emb = class_emb
+        self.ccfg = ccfg
+        self._uplink_bytes: Optional[int] = None
+        self._sample = jax.jit(sample_batch_indices,
+                               static_argnums=(2, 3))
+        self._round = self._build_round()
+
+    # -- uplink accounting --------------------------------------------
+    def uplink_bytes(self, global_tr) -> int:
+        """Per-round total uplink payload: n_clients x the (quantized)
+        per-client delta size. Shape-only (no device work), computed
+        once via the spec path of the quantizer."""
+        if self._uplink_bytes is None:
+            specs = jax.tree.map(
+                lambda g: jax.ShapeDtypeStruct(g.shape, jnp.float32),
+                global_tr)
+            if self.cfg.strategy.comm_bits:
+                specs = quant.quantize_tree_specs(
+                    specs, bits=self.cfg.strategy.comm_bits,
+                    block=strategies_lib.COMM_BLOCK,
+                    min_size=strategies_lib.COMM_MIN_SIZE,
+                    skip_names=strategies_lib.COMM_SKIP)
+            self._uplink_bytes = self.n_clients * tree_bytes(specs)
+        return self._uplink_bytes
+
+    # -- the fused round ----------------------------------------------
+    def _build_round(self):
+        steps = self.cfg.local_steps
+        batch = self.cfg.batch_size
+        lr = self.cfg.lr
+        strategy = self.cfg.strategy
+        ccfg = self.ccfg
+
+        use_lora = strategy.use_lora
+
+        def round_fn(global_tr, idx, pool_staged, pool_labs, weights,
+                     frozen, class_emb):
+            C = idx.shape[0]
+            cohort_tr = jax.tree.map(
+                lambda g: jnp.broadcast_to(g[None], (C,) + g.shape),
+                global_tr)
+
+            def local(tr, staged, labs, ix):
+                opt = optim.adam_init(tr)
+
+                def grad_fn(t, ixt):
+                    bx, by = staged[ixt], labs[ixt]
+
+                    def loss_fn(tt):
+                        feat = clip_lib.encode_tokens(
+                            frozen, ccfg, bx, lora=tt.get("lora")) \
+                            if use_lora else bx
+                        logits = client_lib.head_logits(
+                            frozen, tt, feat, class_emb)
+                        return (losses.cross_entropy(logits, by),
+                                losses.accuracy(logits, by))
+
+                    (loss, acc), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(t)
+                    return g, (loss, acc)
+
+                tr, opt, (ls, accs) = optim.adam_scan(
+                    grad_fn, tr, opt, ix, lr=lr, grad_clip=1.0)
+                return tr, ls[-1], accs[-1]
+
+            after, loss, acc = jax.vmap(local)(
+                cohort_tr, pool_staged, pool_labs, idx)
+            delta = jax.tree.map(
+                lambda a, g: (a - g[None]).astype(jnp.float32),
+                after, global_tr)
+            delta = comm_quantize_stacked(delta, strategy)
+            new_global = server.aggregate_stacked(global_tr, weights,
+                                                  delta)
+            return new_global, loss, acc
+
+        donate = (0,) if self.cfg.donate else ()
+        return jax.jit(round_fn, donate_argnums=donate)
+
+    def run_round(self, global_tr, key):
+        """Advance one federated round. Returns (new_global_trainables,
+        metrics) where metrics carries per-client last-step loss/acc and
+        the round's uplink byte count."""
+        uplink = self.uplink_bytes(global_tr)
+        idx = self._sample(key, self.lens, self.cfg.local_steps,
+                           self.cfg.batch_size)
+        new_tr, loss, acc = self._round(
+            global_tr, idx, self.pool_staged, self.pool_labs,
+            self.weights, self.frozen, self.class_emb)
+        return new_tr, {"loss": np.asarray(loss),
+                        "acc": np.asarray(acc),
+                        "uplink_bytes": uplink}

@@ -14,7 +14,7 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import QTensor, dequantize_tree
+from repro.core.quant import QTensor, dequantize, dequantize_tree
 
 
 def aggregate(global_trainable, updates: Sequence[Tuple[int, object]]):
@@ -28,6 +28,25 @@ def aggregate(global_trainable, updates: Sequence[Tuple[int, object]]):
             jax.tree.map(lambda a, x: a + w * x, acc, d)
     return jax.tree.map(lambda g, a: (g.astype(jnp.float32) + a).astype(
         g.dtype), global_trainable, acc)
+
+
+def aggregate_stacked(global_trainable, weights, stacked_delta):
+    """Batched FedAvg for the cohort engine: every delta leaf carries a
+    leading cohort axis (possibly blockwise-quantized along its trailing
+    dims), and the weighted sum is one ``tensordot`` per leaf instead of
+    a Python loop over clients. Runs inside the jitted cohort round.
+
+    ``weights`` — (n_clients,) float32, already normalized (m_i / Σ m_j).
+    """
+    def reduce_leaf(d):
+        x = dequantize(d, jnp.float32) if isinstance(d, QTensor) else \
+            d.astype(jnp.float32)
+        return jnp.tensordot(weights, x, axes=1)
+
+    agg = jax.tree.map(reduce_leaf, stacked_delta,
+                       is_leaf=lambda l: isinstance(l, QTensor))
+    return jax.tree.map(lambda g, a: (g.astype(jnp.float32) + a).astype(
+        g.dtype), global_trainable, agg)
 
 
 def secure_sum_bytes(updates) -> int:

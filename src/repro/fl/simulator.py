@@ -6,11 +6,16 @@ non-IID (Dirichlet + domain skew) across clients, instantiates a frozen
 communication rounds of local training + weighted aggregation, recording
 server accuracy, per-client loss/acc, uplink bytes, and a GPU-util proxy
 (trainable-FLOP fraction per round).
+
+Round execution defaults to the batched cohort engine (``fl.cohort``):
+one jitted, buffer-donated device call per round. ``engine="sequential"``
+keeps the original per-client Python loop as the reference oracle.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Dict, List
 
 import jax
@@ -18,10 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clip as clip_lib
-from repro.core import losses
+from repro.core import losses, optim
 from repro.core.quant import quantize_tree, tree_bytes
 from repro.data.synthetic import class_tokens, make_dataset, make_eval_set
 from repro.fl import client as client_lib
+from repro.fl import cohort as cohort_lib
 from repro.fl import partition, server
 from repro.fl.strategies import STRATEGIES, Strategy
 
@@ -41,6 +47,7 @@ class FLConfig:
     gan_steps: int = 150
     seed: int = 0
     eval_every: int = 1
+    engine: str = "cohort"        # "cohort" | "sequential"
 
 
 @dataclass
@@ -65,53 +72,84 @@ def pretrained_clip(dataset: str, ccfg: clip_lib.CLIPConfig, *,
     """CLIP_pre stand-in: contrastively pretrain the dual encoder on a
     large balanced synthetic corpus (real CLIP weights are unavailable
     offline — DESIGN.md §7). Cached so all strategy arms share the exact
-    same frozen backbone."""
+    same frozen backbone.
+
+    The whole pretraining run is one jitted ``lax.scan`` with donated
+    (params, opt) buffers — all batch indices are drawn up front (same
+    MT19937 sequence as the former per-step loop) and the corpus is
+    staged on device once.
+    """
     key = (dataset, seed, steps)
     if key in _CLIP_CACHE:
         return _CLIP_CACHE[key]
-    from repro.core import optim
     pre = make_dataset(dataset, n_per_class=80, seed=seed,
                        longtail_gamma=1.0)
     params = clip_lib.init_clip(jax.random.PRNGKey(seed), ccfg)
     opt = optim.adam_init(params)
-
-    @jax.jit
-    def step(params, opt, imgs, toks):
-        loss, g = jax.value_and_grad(
-            lambda p: clip_lib.contrastive_loss(p, ccfg, imgs, toks))(
-                params)
-        params, opt = optim.adam_update(g, opt, params, lr=1e-3,
-                                        grad_clip=1.0)
-        return params, opt, loss
-    rng = np.random.RandomState(seed)
     n = len(pre["labels"])
-    loss = None
-    for _ in range(steps):
-        idx = rng.randint(0, n, batch)
-        params, opt, loss = step(params, opt,
-                                 jnp.asarray(pre["images"][idx]),
-                                 jnp.asarray(pre["tokens"][idx]))
+    idx = jnp.asarray(
+        np.random.RandomState(seed).randint(0, n, (steps, batch)))
+    imgs = jnp.asarray(pre["images"])
+    toks = jnp.asarray(pre["tokens"])
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def train(params, opt, imgs, toks, idx):
+        def grad_fn(p, ix):
+            loss, g = jax.value_and_grad(
+                lambda q: clip_lib.contrastive_loss(
+                    q, ccfg, imgs[ix], toks[ix]))(p)
+            return g, loss
+        return optim.adam_scan(grad_fn, params, opt, idx, lr=1e-3,
+                               grad_clip=1.0)[:2]
+
+    params, _ = train(params, opt, imgs, toks, idx)
     _CLIP_CACHE[key] = params
     return params
 
 
+@partial(jax.jit, static_argnums=(2,))
+def _eval_stats(frozen, trainable, ccfg, class_emb, imgs, labs, mask):
+    """Summed eval statistics over fixed-shape (n_batches, batch, ...)
+    tensors; padding rows carry mask 0. One compile per run — the scan
+    body reuses a single ``forward_logits`` program for every batch,
+    remainder included."""
+    def body(carry, xs):
+        im, y, m = xs
+        logits = client_lib.forward_logits(frozen, trainable, ccfg, im,
+                                           class_emb)
+        pred = jnp.argmax(logits, -1)
+        n = jnp.sum(m)
+        loss_sum = losses.cross_entropy(logits, y, m) * n
+        acc_sum = jnp.sum((pred == y) * m)
+        tail = (y == 0) * m
+        carry = (carry[0] + acc_sum, carry[1] + loss_sum,
+                 carry[2] + jnp.sum((pred == 0) * tail),
+                 carry[3] + jnp.sum(tail))
+        return carry, None
+
+    zeros = (jnp.zeros(()),) * 4
+    (acc, loss, tail_hit, tail_n), _ = jax.lax.scan(
+        body, zeros, (imgs, labs, mask))
+    return acc, loss, tail_hit, tail_n
+
+
 def _server_eval(frozen, trainable, ccfg, class_emb, eval_set, batch=128):
     imgs, labs = eval_set["images"], eval_set["labels"]
-    accs, ls = [], []
-    tail_hit = tail_n = 0
-    for i in range(0, len(labs), batch):
-        logits = client_lib.forward_logits(
-            frozen, trainable, ccfg, jnp.asarray(imgs[i:i + batch]),
-            class_emb)
-        y = jnp.asarray(labs[i:i + batch])
-        pred = jnp.argmax(logits, -1)
-        accs.append(float(losses.accuracy(logits, y)) * len(y))
-        ls.append(float(losses.cross_entropy(logits, y)) * len(y))
-        mask = y == 0
-        tail_hit += float(jnp.sum((pred == 0) & mask))
-        tail_n += float(jnp.sum(mask))
-    return (sum(accs) / len(labs), sum(ls) / len(labs),
-            tail_hit / max(tail_n, 1.0))
+    n = len(labs)
+    nb = -(-n // batch)
+    pad = nb * batch - n
+    imgs_p = np.concatenate(
+        [imgs, np.zeros((pad, *imgs.shape[1:]), imgs.dtype)])
+    labs_p = np.concatenate([labs, np.zeros((pad,), labs.dtype)])
+    mask = np.concatenate([np.ones(n, np.float32), np.zeros(pad,
+                                                            np.float32)])
+    acc, loss, tail_hit, tail_n = _eval_stats(
+        frozen, trainable, ccfg, class_emb,
+        jnp.asarray(imgs_p.reshape(nb, batch, *imgs.shape[1:])),
+        jnp.asarray(labs_p.reshape(nb, batch)),
+        jnp.asarray(mask.reshape(nb, batch)))
+    return (float(acc) / n, float(loss) / n,
+            float(tail_hit) / max(float(tail_n), 1.0))
 
 
 def run_federated(cfg: FLConfig) -> History:
@@ -150,6 +188,9 @@ def run_federated(cfg: FLConfig) -> History:
         clients.append(client_lib.Client(
             cid=i, images=data["images"][idx], labels=data["labels"][idx],
             n_classes=spec.n_classes, strategy=strat))
+    # very skewed Dirichlet draws can leave a shard empty; a client with
+    # no data cannot train (either engine) and would get weight 0 anyway
+    clients = [c for c in clients if c.n > 0]
     if strat.use_gan:
         for i, c in enumerate(clients):
             if c.n >= 8:
@@ -165,6 +206,8 @@ def run_federated(cfg: FLConfig) -> History:
     hist = History(meta={
         "strategy": strat.name, "dataset": cfg.dataset,
         "n_clients": cfg.n_clients,
+        "n_clients_active": len(clients),
+        "engine": cfg.engine,
         "trainable_params": int(trainable_params),
         "frozen_params": int(frozen_params),
         "backbone_bytes": int(backbone_bytes),
@@ -178,25 +221,44 @@ def run_federated(cfg: FLConfig) -> History:
             (frozen_params * 4 + trainable_params * 12)),
     })
 
+    engine = None
+    if cfg.engine == "cohort":
+        engine = cohort_lib.CohortEngine(
+            frozen=frozen, ccfg=ccfg, class_emb=class_emb,
+            clients=clients,
+            cfg=cohort_lib.CohortConfig(
+                strategy=strat, local_steps=cfg.local_steps,
+                batch_size=cfg.batch_size, lr=cfg.lr))
+    elif cfg.engine != "sequential":
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+
     for rnd in range(cfg.rounds):
         t0 = time.time()
-        updates, closs, cacc = [], [], []
-        for i, c in enumerate(clients):
-            tr_after, m = c.local_train(
-                frozen, global_tr, class_emb, ccfg,
-                steps=cfg.local_steps, batch_size=cfg.batch_size,
-                lr=cfg.lr, seed=cfg.seed * 1000 + rnd * 100 + i)
-            upd, _ = c.make_update(global_tr, tr_after)
-            updates.append((c.n, upd))
-            closs.append(m["loss"])
-            cacc.append(m["acc"])
-        global_tr = server.aggregate(global_tr, updates)
-        hist.uplink_bytes.append(server.secure_sum_bytes(updates))
+        if engine is not None:
+            key = jax.random.fold_in(jax.random.fold_in(rng, 3), rnd)
+            global_tr, m = engine.run_round(global_tr, key)
+            closs = [float(v) for v in m["loss"]]
+            cacc = [float(v) for v in m["acc"]]
+            hist.uplink_bytes.append(int(m["uplink_bytes"]))
+        else:
+            updates, closs, cacc = [], [], []
+            for i, c in enumerate(clients):
+                tr_after, m = c.local_train(
+                    frozen, global_tr, class_emb, ccfg,
+                    steps=cfg.local_steps, batch_size=cfg.batch_size,
+                    lr=cfg.lr, seed=cfg.seed * 1000 + rnd * 100 + i)
+                upd, _ = c.make_update(global_tr, tr_after)
+                updates.append((c.n, upd))
+                closs.append(m["loss"])
+                cacc.append(m["acc"])
+            global_tr = server.aggregate(global_tr, updates)
+            hist.uplink_bytes.append(server.secure_sum_bytes(updates))
         hist.client_loss.append(closs)
         hist.client_acc.append(cacc)
         hist.round_time_s.append(time.time() - t0)
-        hist.util_proxy.append(hist.meta["util_proxy_const"] *
-                               (1.0 + 0.05 * np.sin(rnd)))
+        # measured footprint constant (Fig. 3) — deterministic, no
+        # synthetic wiggle
+        hist.util_proxy.append(hist.meta["util_proxy_const"])
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
             acc, loss, tail = _server_eval(frozen, global_tr, ccfg,
                                            class_emb, eval_set)

@@ -3,10 +3,20 @@
 - fedclip      : frozen CLIP + attention adapter, fp32 communication.
 - qlora_nogan  : + NF4-quantized backbone + LoRA, quantized (int8) comm.
 - tripleplay   : qlora_nogan + client-side GAN long-tail rebalancing.
+
+The uplink compression parameters live here (not in the client) so the
+sequential reference path and the batched cohort engine apply *identical*
+quantization semantics — the parity tests depend on it.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+# Blockwise update-quantization layout shared by every strategy arm that
+# compresses communication (client.make_update and fl.cohort).
+COMM_BLOCK = 64
+COMM_MIN_SIZE = 256
+COMM_SKIP = ("slot",)
 
 
 @dataclass(frozen=True)
@@ -17,6 +27,14 @@ class Strategy:
     backbone_mode: str
     comm_bits: int           # 0 = fp32 updates
     use_gan: bool
+
+    def comm_quantize(self, delta):
+        """Quantize an update tree per this arm's uplink compression."""
+        if not self.comm_bits:
+            return delta
+        from repro.core.quant import quantize_tree
+        return quantize_tree(delta, bits=self.comm_bits, block=COMM_BLOCK,
+                             min_size=COMM_MIN_SIZE, skip_names=COMM_SKIP)
 
 
 STRATEGIES = {

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core import quant as qlib
 from repro.kernels import ref
 from repro.models import runtime as rt_lib
@@ -71,7 +72,7 @@ def flash_attention(q, k, v, *, causal=True, window=None,
         return _kernel_flash(q_l, k_e, v_e, causal=causal, window=window,
                              q_chunk=q_chunk, k_chunk=k_chunk)
 
-    out = jax.shard_map(
+    out = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(dp or None, None, rt.tp_axis, None),
                   P(dp or None, None, None, None),
@@ -101,7 +102,7 @@ def decode_attention(q, k_cache, v_cache, slot_pos):
         Bl = q_l.shape[0]
         return out.reshape(Bl, 1, H, D).astype(q_l.dtype)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(dp or None, None, None, None),
                   P(dp or None, rt.tp_axis, None, None),

@@ -25,6 +25,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.core import compat
 from repro.core import optim
 from repro.launch import shardings as sh
 from repro.launch.mesh import dp_axes, make_production_mesh
@@ -353,7 +354,7 @@ def fed_agg_dryrun(arch: str, *, multi_pod: bool = True,
         out_specs = jax.tree.map(
             lambda l: P(), jax.eval_shape(
                 lambda d, w: fed_agg_psum(d, w), stacked, weights))
-        return jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+        return compat.shard_map(local, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)(
                                  deltas, w)
 
@@ -393,7 +394,7 @@ def fed_agg_dryrun(arch: str, *, multi_pod: bool = True,
             stacked, is_leaf=lambda l: isinstance(l, QTensor)), P())
         out_specs = jax.tree.map(
             lambda l: P(), jax.eval_shape(fed_agg_psum, stacked, weights))
-        return jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+        return compat.shard_map(local, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, check_vma=False)(
                                  deltas, w)
 

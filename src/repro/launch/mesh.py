@@ -49,3 +49,23 @@ def make_debug_mesh(shape=(1, 2, 2), axes=("pod", "data", "model")):
 
 def dp_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def cohort_sharding(mesh, ndim: int):
+    """NamedSharding splitting a leading cohort (client) axis across the
+    mesh's data-parallel axes, everything else replicated. The cohort
+    engine device_puts its staged pools / stacked trainables with this so
+    a single jitted round spreads clients over the mesh (pjit partitions
+    the vmapped local-training program along the cohort axis)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    dp = dp_axes(mesh)
+    return NamedSharding(
+        mesh, PartitionSpec(dp if dp else None, *([None] * (ndim - 1))))
+
+
+def cohort_axis_size(mesh) -> int:
+    """Number of mesh shards along the cohort (data-parallel) axes."""
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n

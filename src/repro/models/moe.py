@@ -30,6 +30,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import compat
 from repro.core.quant import QTensor, dequantize
 from repro.models import runtime as rt_lib
 
@@ -265,7 +266,7 @@ def moe_ffn(p, x, cfg: ModelConfig):
             x_loc = x_in.reshape(-1, d)
             y, aux = _moe_dist_body(x_loc, p_in, cfg, m, tp, fsdp)
             return y.reshape(x_in.shape), lax.pmean(aux, all_axes)
-        return jax.shard_map(
+        return compat.shard_map(
             fn, mesh=mesh,
             in_specs=(P(dp, tp, None), pspecs),
             out_specs=(P(dp, tp, None), P()),
@@ -281,7 +282,7 @@ def moe_ffn(p, x, cfg: ModelConfig):
         y_loc, aux = _moe_dist_body(x_loc, p_in, cfg, m, tp, fsdp)
         y_all = lax.all_gather(y_loc, tp, axis=0, tiled=True)[:Bl]
         return y_all.reshape(x_in.shape), lax.pmean(aux, all_axes)
-    return jax.shard_map(
+    return compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(dp, None, None), pspecs),
         out_specs=(P(dp, None, None), P()),

@@ -18,6 +18,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import compat
 from repro.core import lora as lora_lib
 from repro.models import runtime as rt_lib
 from repro.models.ssm import chunked_linear_scan, _causal_conv, _lora_delta
@@ -156,7 +157,7 @@ def rglru_block(p, x, cfg: ModelConfig, *, lora=None, h0=None):
             out = lax.psum(out, tp)
         return out, cache
 
-    return jax.shard_map(
+    return compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(dp, seq_out, None), pspec, lspec,
                   None if h0 is None else P(dp, tp)),

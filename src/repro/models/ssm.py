@@ -27,6 +27,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import compat
 from repro.core import lora as lora_lib
 from repro.models import runtime as rt_lib
 
@@ -282,7 +283,7 @@ def mamba_block(p, x, cfg: ModelConfig, *, lora=None, h0=None):
         return out, cache
 
     h0_spec = P(dp, tp, None)
-    return jax.shard_map(
+    return compat.shard_map(
         fn, mesh=mesh,
         in_specs=(P(dp, seq_out, None), pspec, lspec,
                   None if h0 is None else h0_spec),

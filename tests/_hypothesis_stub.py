@@ -1,0 +1,80 @@
+"""Deterministic fallback for the ``hypothesis`` API surface this suite
+uses, installed by conftest.py only when the real package is missing
+(this container has no network). ``@given`` degrades to a seeded
+pseudo-random sweep of ``max_examples`` draws per strategy — weaker than
+real shrinking/search, but the property assertions still execute.
+"""
+from __future__ import annotations
+
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(lambda rng: [
+        elements.example(rng)
+        for _ in range(rng.randint(min_size, max_size))])
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0)
+            for _ in range(wrapper._max_examples):
+                ex = tuple(s.example(rng) for s in strategies)
+                kex = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*args, *ex, **kwargs, **kex)
+        wrapper._max_examples = 10
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def settings(max_examples=10, **_kw):
+    def deco(fn):
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def install(sys_modules):
+    """Register this stub as ``hypothesis`` + ``hypothesis.strategies``."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans",
+                 "lists"):
+        setattr(st, name, globals()[name])
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    sys_modules["hypothesis"] = hyp
+    sys_modules["hypothesis.strategies"] = st

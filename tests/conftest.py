@@ -1,5 +1,15 @@
+import sys
+
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # Offline container without hypothesis: install the deterministic
+    # fallback before test modules import it (conftest loads first).
+    from _hypothesis_stub import install
+    install(sys.modules)
 
 
 @pytest.fixture

@@ -89,6 +89,90 @@ def test_one_federated_round_improves_loss():
     assert all(b > 0 for b in h.uplink_bytes)
 
 
+def _parity_setup(strategy_name, *, n_clients=3, seed=0, gan_steps=25):
+    """Small FL instance + one engine/oracle round over identical batches."""
+    from repro.core import clip as clip_lib
+    from repro.data.synthetic import class_tokens, make_dataset
+    from repro.fl import client as client_lib
+    from repro.fl import cohort as cohort_lib
+
+    strat = STRATEGIES[strategy_name]
+    ccfg = clip_lib.CLIPConfig()
+    frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+    data = make_dataset("pacs", n_per_class=12, seed=seed,
+                        longtail_gamma=4.0)
+    spec = data["spec"]
+    class_emb = clip_lib.text_embedding(
+        frozen, ccfg,
+        jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+    parts = partition.dirichlet_partition(data["labels"], n_clients, 0.5,
+                                          seed=seed)
+    clients = [client_lib.Client(
+        cid=i, images=data["images"][idx], labels=data["labels"][idx],
+        n_classes=spec.n_classes, strategy=strat)
+        for i, idx in enumerate(parts)]
+    if strat.use_gan:
+        for i, c in enumerate(clients):
+            if c.n >= 8:
+                c.prepare_gan(jax.random.PRNGKey(100 + i),
+                              steps=gan_steps)
+    global_tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg,
+                                          strat)
+    steps, batch, lr = 4, 8, 3e-3
+    engine = cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(strategy=strat, local_steps=steps,
+                                    batch_size=batch, lr=lr,
+                                    donate=False))
+    key = jax.random.PRNGKey(42)
+    new_tr, metrics = engine.run_round(global_tr, key)
+
+    # sequential oracle over the engine's exact batch index sequence
+    idx = cohort_lib.round_indices(key, np.asarray(engine.lens), steps,
+                                   batch)
+    updates, oloss, oacc = [], [], []
+    for i, c in enumerate(clients):
+        tr_after, m = c.local_train(frozen, global_tr, class_emb, ccfg,
+                                    steps=steps, batch_size=batch, lr=lr,
+                                    indices=idx[i])
+        upd, _ = c.make_update(global_tr, tr_after)
+        updates.append((c.n, upd))
+        oloss.append(m["loss"])
+        oacc.append(m["acc"])
+    ref_tr = server.aggregate(global_tr, updates)
+    ref_bytes = server.secure_sum_bytes(updates)
+    return new_tr, metrics, ref_tr, ref_bytes, oloss, oacc
+
+
+@pytest.mark.parametrize("arm", ["fedclip", "tripleplay"])
+def test_cohort_matches_sequential_oracle(arm):
+    """The fused vmap/scan round must reproduce the per-client Python
+    loop: final global trainables, per-client loss/acc, uplink bytes."""
+    new_tr, m, ref_tr, ref_bytes, oloss, oacc = _parity_setup(arm)
+    flat_new = jax.tree_util.tree_leaves_with_path(new_tr)
+    flat_ref = dict(
+        (jax.tree_util.keystr(p), l)
+        for p, l in jax.tree_util.tree_leaves_with_path(ref_tr))
+    for path, leaf in flat_new:
+        ref = flat_ref[jax.tree_util.keystr(path)]
+        np.testing.assert_allclose(np.asarray(leaf), np.asarray(ref),
+                                   atol=5e-4, rtol=0, err_msg=str(path))
+    np.testing.assert_allclose(m["loss"], oloss, atol=1e-3, rtol=1e-4)
+    np.testing.assert_allclose(m["acc"], oacc, atol=1e-5)
+    assert int(m["uplink_bytes"]) == int(ref_bytes)
+
+
+def test_cohort_engine_default_in_simulator():
+    from repro.fl.simulator import FLConfig, run_federated
+    h = run_federated(FLConfig(
+        dataset="pacs", strategy="fedclip", n_clients=2, rounds=2,
+        local_steps=3, n_per_class=12, batch_size=8, lr=3e-3))
+    assert h.meta["engine"] == "cohort"
+    assert len(h.client_loss) == 2 and len(h.client_loss[0]) == 2
+    # Fig. 3 util proxy is the measured footprint constant — no wiggle
+    assert h.util_proxy[0] == h.util_proxy[1] == h.meta["util_proxy_const"]
+
+
 def test_strategy_arms_registered():
     assert set(STRATEGIES) == {"fedclip", "qlora_nogan", "tripleplay"}
     assert STRATEGIES["tripleplay"].use_gan

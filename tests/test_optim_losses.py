@@ -24,6 +24,38 @@ def test_grad_clip_bounds_update():
     assert float(jnp.abs(p2["x"]).max()) < 10.0
 
 
+def test_adam_scan_matches_loop(rng):
+    """The lax.scan-fused Adam (cohort engine / CLIP pretrain substrate)
+    must be step-for-step identical to the Python loop of adam_update."""
+    params = {"w": jnp.asarray(rng.randn(8, 4), jnp.float32),
+              "b": jnp.zeros((4,))}
+    xs = jnp.asarray(rng.randn(12, 8), jnp.float32)
+
+    def grad_fn(p, x):
+        def loss(q):
+            return jnp.mean((x @ q["w"] + q["b"]) ** 2)
+        l, g = jax.value_and_grad(loss)(p)
+        return g, l
+
+    lp, ls = params, optim.adam_init(params)
+    loop_losses = []
+    for i in range(xs.shape[0]):
+        g, l = grad_fn(lp, xs[i])
+        loop_losses.append(float(l))
+        lp, ls = optim.adam_update(g, ls, lp, lr=1e-2, grad_clip=1.0)
+
+    sp, ss, saux = optim.adam_scan(grad_fn, params,
+                                   optim.adam_init(params), xs,
+                                   lr=1e-2, grad_clip=1.0)
+    assert int(ss.step) == int(ls.step) == xs.shape[0]
+    np.testing.assert_allclose(np.asarray(saux), loop_losses, rtol=1e-6)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(sp[k]), np.asarray(lp[k]),
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ss.mu[k]),
+                                   np.asarray(ls.mu[k]), atol=1e-6)
+
+
 def test_cosine_schedule_endpoints():
     s = optim.cosine_schedule(1.0, warmup=10, total=100)
     assert float(s(jnp.asarray(0.0))) == 0.0

@@ -11,7 +11,10 @@ from repro.core.quant import QTensor
 from repro.launch import shardings as sh
 from repro.models import build_model
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
+try:
+    MESH = AbstractMesh((16, 16), ("data", "model"))
+except TypeError:   # jax<=0.4.x API: tuple of (name, size) pairs
+    MESH = AbstractMesh((("data", 16), ("model", 16)))
 AXIS = {"data": 16, "model": 16, "pod": 2}
 
 
