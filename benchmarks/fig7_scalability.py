@@ -1,4 +1,7 @@
-"""Fig. 7: TriplePlay scalability — 5 vs 10 FL clients (PACS)."""
+"""Fig. 7: TriplePlay scalability — 5 vs 10 FL clients (PACS), plus the
+scheduler sweep: at fixed N, vary ``clients_per_round`` across
+sync-partial and async-buffered policies (skewed availability trace) to
+track accuracy-vs-uplink under partial participation."""
 from __future__ import annotations
 
 from benchmarks.fl_common import fl_config, hist_dict, save
@@ -14,5 +17,19 @@ def run() -> list[str]:
         rows.append(f"fig7/clients{n}/final_acc,"
                     f"{h.server_acc[-1]*1e6:.0f},"
                     f"final_loss={h.server_loss[-1]:.3f}")
+
+    # scheduler sweep: fixed N=10 population, varying cohort width K
+    n_fixed = 10
+    for policy in ("sync-partial", "async"):
+        for k in (2, 5, 10):
+            h = run_federated(fl_config(
+                "pacs", "tripleplay", n_clients=n_fixed,
+                n_per_class=48, participation=policy,
+                clients_per_round=k, trace="skewed"))
+            tag = f"{policy}_k{k}"
+            out[tag] = hist_dict(h)
+            rows.append(
+                f"fig7/{tag}/final_acc,{h.server_acc[-1]*1e6:.0f},"
+                f"uplink_mib={sum(h.uplink_bytes)/2**20:.2f}")
     save("fig7_scalability", out)
     return rows

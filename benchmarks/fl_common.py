@@ -43,4 +43,5 @@ def hist_dict(h) -> dict:
             "server_loss": h.server_loss, "client_loss": h.client_loss,
             "client_acc": h.client_acc, "uplink_bytes": h.uplink_bytes,
             "round_time_s": h.round_time_s, "util_proxy": h.util_proxy,
-            "meta": h.meta}
+            "participation": h.participation, "staleness": h.staleness,
+            "vtime": h.vtime, "meta": h.meta}

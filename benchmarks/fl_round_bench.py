@@ -10,6 +10,12 @@ quantization, where only the patch embedding hoists) — and writes
 tracked from this PR onward. Both paths compute the same local-training
 math (see the cohort-vs-sequential parity tests).
 
+A second sweep holds the population fixed (N = max(N_CLIENTS)) and
+varies ``clients_per_round``: sync-partial rounds gather K rows of the
+already-staged pools inside the fused program, so round time should
+scale with K while staging cost stays one-time. Results land in the
+same ``BENCH_fl_round.json`` under ``partial_points``.
+
 REPRO_BENCH_SCALE=quick (default) times 3 rounds per point; =paper 10.
 """
 from __future__ import annotations
@@ -32,6 +38,7 @@ from repro.fl.strategies import STRATEGIES
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 N_CLIENTS = (2, 8, 32)
+CLIENTS_PER_ROUND = (2, 4, 8, 16)   # sync-partial sweep at fixed N
 LOCAL_STEPS = 6
 BATCH = 32
 LR = 3e-3
@@ -98,6 +105,27 @@ def time_cohort(strat, frozen, tr, class_emb, ccfg, clients) -> float:
     return (time.perf_counter() - t0) / ROUNDS
 
 
+def time_subset(engine, tr, k: int) -> tuple[float, int]:
+    """Steady-state sync-partial round time at cohort width k: the
+    fused subset program compiles once per k; each round indexes a
+    fresh selection of the device-staged pools (no re-upload). The
+    engine is shared across widths — staging is one-time per arm."""
+    rs = np.random.RandomState(0)
+    sels = [rs.choice(engine.n_clients, k, replace=False)
+            for _ in range(ROUNDS + 1)]
+    key = jax.random.PRNGKey(0)
+    tr = jax.tree.map(jnp.copy, tr)
+    tr, m = engine.run_subset_round(tr, sels[0],
+                                    jax.random.fold_in(key, 999))
+    jax.block_until_ready(jax.tree.leaves(tr))          # compile/warmup
+    t0 = time.perf_counter()
+    for rnd in range(ROUNDS):
+        tr, m = engine.run_subset_round(tr, sels[rnd + 1],
+                                        jax.random.fold_in(key, rnd))
+    jax.block_until_ready(jax.tree.leaves(tr))
+    return (time.perf_counter() - t0) / ROUNDS, int(m["uplink_bytes"])
+
+
 def main():
     results = {"config": {"local_steps": LOCAL_STEPS, "batch": BATCH,
                           "rounds_timed": ROUNDS,
@@ -117,6 +145,31 @@ def main():
             print(f"{arm:12s} n_clients={n:3d} ({len(clients):3d} with "
                   f"data)  sequential={seq*1e3:8.1f} ms  "
                   f"cohort={coh*1e3:7.1f} ms  speedup={seq/coh:5.1f}x")
+
+    # sync-partial sweep: fixed population, varying cohort width K
+    n_fixed = max(N_CLIENTS)
+    results["partial_points"] = []
+    for arm in ("fedclip", "qlora_nogan"):
+        strat, ccfg, frozen, class_emb, clients, tr = _setup(arm,
+                                                             n_fixed)
+        engine = cohort_lib.CohortEngine(
+            frozen=frozen, ccfg=ccfg, class_emb=class_emb,
+            clients=clients,
+            cfg=cohort_lib.CohortConfig(strategy=strat,
+                                        local_steps=LOCAL_STEPS,
+                                        batch_size=BATCH, lr=LR))
+        for k in (*CLIENTS_PER_ROUND, len(clients)):
+            if k > len(clients):
+                continue
+            sub, uplink = time_subset(engine, tr, k)
+            point = {"strategy": arm, "n_clients": n_fixed,
+                     "n_clients_effective": len(clients),
+                     "clients_per_round": k,
+                     "subset_round_s": sub, "uplink_bytes": uplink}
+            results["partial_points"].append(point)
+            print(f"{arm:12s} N={len(clients):3d} K={k:3d}  "
+                  f"subset={sub*1e3:7.1f} ms  "
+                  f"uplink={uplink/2**20:6.2f} MiB")
     out = ROOT / "BENCH_fl_round.json"
     with open(out, "w") as f:
         json.dump(results, f, indent=1)

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 gate: full unit suite, then a 2-client/2-round cohort-engine
-# smoke run through the public simulator entry point.
+# Tier-1 gate: full unit suite, then 2-round smoke runs through the
+# public simulator entry point — full-sync cohort engine, plus the
+# sync-partial and async-buffered scheduler policies (fl.sched).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,8 +15,30 @@ h = run_federated(FLConfig(
     local_steps=3, n_per_class=12, batch_size=8, gan_steps=30,
     lr=3e-3))
 assert h.meta["engine"] == "cohort"
+assert h.meta["participation"] == "full-sync"
+assert h.meta["compile_time_s"] > 0
 assert len(h.client_loss) == 2 and len(h.client_loss[0]) == 2
 assert all(b > 0 for b in h.uplink_bytes)
 print("cohort smoke run OK:", {"server_loss": h.server_loss,
                                "uplink_bytes": h.uplink_bytes})
+
+h = run_federated(FLConfig(
+    dataset="pacs", strategy="fedclip", n_clients=4, rounds=2,
+    local_steps=3, n_per_class=12, batch_size=8, lr=3e-3,
+    participation="sync-partial", clients_per_round=2, trace="skewed"))
+assert h.meta["participation"] == "sync-partial"
+assert all(len(p) == 2 for p in h.participation)
+assert all(b > 0 for b in h.uplink_bytes)
+print("sync-partial smoke run OK:", {"participation": h.participation})
+
+h = run_federated(FLConfig(
+    dataset="pacs", strategy="fedclip", n_clients=4, rounds=2,
+    local_steps=3, n_per_class=12, batch_size=8, lr=3e-3,
+    participation="async", clients_per_round=2, trace="skewed"))
+assert h.meta["participation"] == "async"
+assert all(t >= 0 for taus in h.staleness for t in taus)
+assert h.vtime == sorted(h.vtime) and h.vtime[0] > 0
+print("async smoke run OK:", {"participation": h.participation,
+                              "staleness": h.staleness,
+                              "vtime": h.vtime})
 EOF

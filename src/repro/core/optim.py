@@ -63,7 +63,7 @@ def adam_update(grads, state: AdamState, params, *, lr, b1=0.9, b2=0.999,
 
 def adam_scan(grad_fn, params, state: AdamState, xs, *, lr, b1=0.9,
               b2=0.999, eps=1e-8, weight_decay=0.0, grad_clip=0.0,
-              unroll=1):
+              unroll=1, active=None):
     """Fused local-training loop: one ``adam_update`` per leading element
     of ``xs``, inside a single ``lax.scan`` — the scan-friendly form used
     by the cohort engine and the CLIP pretraining loop, so a whole
@@ -73,16 +73,34 @@ def adam_scan(grad_fn, params, state: AdamState, xs, *, lr, b1=0.9,
     ``grad_fn(params, x) -> (grads, aux)``; returns
     ``(params, state, aux_stacked)`` where each adam_update step matches
     the Python-loop semantics of calling ``adam_update`` per batch.
+
+    ``active`` — optional per-step bool vector (same leading length as
+    ``xs``). Steps with ``active[t] == False`` leave params and optimizer
+    state (moments *and* step counter) untouched, so a scan of static
+    length S with the first ``n`` steps active is bit-identical to a
+    Python loop of ``n`` adam_update calls. This is how the cohort engine
+    runs clients with heterogeneous local-step counts inside one
+    fixed-shape program; aux is still emitted for masked steps (evaluated
+    on the frozen params) — callers index the last *active* entry.
     """
+    masked = active is not None
+
     def body(carry, x):
         p, s = carry
+        if masked:
+            x, live = x
         g, aux = grad_fn(p, x)
-        p, s = adam_update(g, s, p, lr=lr, b1=b1, b2=b2, eps=eps,
-                           weight_decay=weight_decay, grad_clip=grad_clip)
-        return (p, s), aux
+        p2, s2 = adam_update(g, s, p, lr=lr, b1=b1, b2=b2, eps=eps,
+                             weight_decay=weight_decay,
+                             grad_clip=grad_clip)
+        if masked:
+            p2 = jax.tree.map(lambda a, b: jnp.where(live, a, b), p2, p)
+            s2 = jax.tree.map(lambda a, b: jnp.where(live, a, b), s2, s)
+        return (p2, s2), aux
 
-    (params, state), aux = jax.lax.scan(body, (params, state), xs,
-                                        unroll=unroll)
+    (params, state), aux = jax.lax.scan(
+        body, (params, state), (xs, active) if masked else xs,
+        unroll=unroll)
     return params, state, aux
 
 

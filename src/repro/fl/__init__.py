@@ -1,3 +1,5 @@
 # Federated-learning runtime: partitioning, clients, server aggregation,
 # the paper's three strategy arms, the batched cohort execution engine
-# (cohort.py — vmap/scan-fused rounds), and the round simulator.
+# (cohort.py — vmap/scan-fused rounds), the round scheduler subsystem
+# (sched/ — full-sync, sync-partial, and async-buffered participation
+# policies over availability traces), and the round simulator.

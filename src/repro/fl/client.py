@@ -95,10 +95,20 @@ class Client:
     gan_cfg: Optional[gan_lib.GANConfig] = None
     aug_images: Optional[np.ndarray] = None
     aug_labels: Optional[np.ndarray] = None
+    # availability-trace heterogeneity hook: this client runs
+    # ``step_mult`` x the configured local steps per round (fast/slow
+    # devices). Both executors read it — the cohort engine masks the
+    # extra scan steps, the sequential path just runs fewer/more batches.
+    step_mult: int = 1
 
     @property
     def n(self) -> int:
         return len(self.labels)
+
+    def local_steps_for(self, base_steps: int) -> int:
+        """Per-round local step count under this client's trace-assigned
+        compute multiplier."""
+        return int(base_steps) * max(1, int(self.step_mult))
 
     def prepare_gan(self, rng, *, steps: int = 150):
         """Train the local conditional GAN and synthesize a rebalancing

@@ -38,6 +38,18 @@ buffer-donated call**:
 The sequential ``Client.local_train`` path stays alive as the reference
 oracle; ``round_indices`` reproduces the engine's sample sequence so
 parity tests can drive both paths with identical batches.
+
+Partial participation (``fl.sched``) builds on the same staging: the
+pools of *all* clients stay device-resident, and a subset round is the
+same fused program prefixed with a gather — ``pool_staged[sel]`` for a
+fixed cohort width K, so selecting a different subset each round never
+re-uploads data or recompiles. ``run_subset_round`` aggregates in-program
+(sync-partial); ``run_wave`` stops before aggregation and returns the
+stacked quantized deltas, which the async scheduler buffers on the host
+and commits with staleness-discounted weights. Heterogeneous per-client
+local-step counts (availability traces) run inside the same fixed-length
+scan via the ``active`` mask of ``optim.adam_scan`` — a masked step is a
+bitwise no-op on (params, opt state).
 """
 from __future__ import annotations
 
@@ -84,9 +96,28 @@ def sample_batch_indices(key, lens, steps: int, batch: int):
 
 
 def round_indices(key, lens, steps: int, batch: int) -> np.ndarray:
-    """Host-side view of one round's per-client batch indices."""
+    """Host-side view of one round's per-client batch indices. For subset
+    rounds pass ``lens[sel]`` (and the engine's ``max_steps``) — the
+    fused program and the sequential oracle then see identical batches."""
     return np.asarray(sample_batch_indices(
         key, jnp.asarray(lens, jnp.int32), steps, batch))
+
+
+def slice_client_delta(stacked_delta, i: int):
+    """Extract client ``i``'s delta from a stacked (possibly quantized)
+    delta tree. QTensor leaves are re-wrapped with per-client metadata so
+    slices taken from waves of different widths share one treedef (the
+    async scheduler stacks buffered slices across waves) and
+    ``tree_bytes`` reports the true per-client uplink payload."""
+    def f(l):
+        if isinstance(l, quant.QTensor):
+            return quant.QTensor(
+                q=l.q[i], scales=l.scales[i], bits=l.bits, mode=l.mode,
+                block=l.block, out_dtype=l.out_dtype,
+                orig_shape=tuple(l.orig_shape[1:]))
+        return l[i]
+    return jax.tree.map(f, stacked_delta,
+                        is_leaf=lambda l: isinstance(l, quant.QTensor))
 
 
 def comm_quantize_stacked(delta, strategy: Strategy):
@@ -134,8 +165,20 @@ class CohortEngine:
                 "(sequential or cohort) need every participant to hold "
                 "data — drop them from the cohort")
         imgs, labs, lens = stage_client_pools([c.pool() for c in clients])
-        weights = np.asarray([c.n for c in clients], np.float32)
-        weights = weights / weights.sum()
+        self.client_n = np.asarray([c.n for c in clients], np.float32)
+        weights = self.client_n / self.client_n.sum()
+        # trace-assigned compute heterogeneity: client i runs
+        # local_steps * step_mult[i] steps; the fused program scans the
+        # static max and masks the tail per client.
+        self.step_mult = np.asarray(
+            [c.local_steps_for(1) for c in clients], np.int32)
+        if self.step_mult.max() > strategies_lib.MAX_STEP_MULT:
+            raise ValueError(
+                f"client step multipliers {self.step_mult.max()} exceed "
+                f"strategies.MAX_STEP_MULT={strategies_lib.MAX_STEP_MULT}"
+                " — the fused scan length must stay bounded")
+        self.max_steps = cfg.local_steps * int(self.step_mult.max())
+        self._het = bool(self.step_mult.max() > 1)
 
         if cfg.mesh is not None:
             shards = mesh_lib.cohort_axis_size(cfg.mesh)
@@ -173,17 +216,20 @@ class CohortEngine:
         self.frozen = frozen
         self.class_emb = class_emb
         self.ccfg = ccfg
-        self._uplink_bytes: Optional[int] = None
+        self._uplink_per_client: Optional[int] = None
         self._sample = jax.jit(sample_batch_indices,
                                static_argnums=(2, 3))
         self._round = self._build_round()
+        self._subset_rounds = {}   # K -> jitted train+aggregate program
+        self._wave_rounds = {}     # K -> jitted train-only wave program
 
     # -- uplink accounting --------------------------------------------
-    def uplink_bytes(self, global_tr) -> int:
-        """Per-round total uplink payload: n_clients x the (quantized)
-        per-client delta size. Shape-only (no device work), computed
-        once via the spec path of the quantizer."""
-        if self._uplink_bytes is None:
+    def per_client_uplink_bytes(self, global_tr) -> int:
+        """One client's (quantized) delta payload. Shape-only (no device
+        work), computed once via the spec path of the quantizer; exact
+        for every participant because quantization is leading-axis-inert
+        and all clients share the trainable shapes."""
+        if self._uplink_per_client is None:
             specs = jax.tree.map(
                 lambda g: jax.ShapeDtypeStruct(g.shape, jnp.float32),
                 global_tr)
@@ -193,55 +239,79 @@ class CohortEngine:
                     block=strategies_lib.COMM_BLOCK,
                     min_size=strategies_lib.COMM_MIN_SIZE,
                     skip_names=strategies_lib.COMM_SKIP)
-            self._uplink_bytes = self.n_clients * tree_bytes(specs)
-        return self._uplink_bytes
+            self._uplink_per_client = tree_bytes(specs)
+        return self._uplink_per_client
+
+    def uplink_bytes(self, global_tr) -> int:
+        """Full-cohort round uplink: n_clients x per-client delta size."""
+        return self.n_clients * self.per_client_uplink_bytes(global_tr)
 
     # -- the fused round ----------------------------------------------
-    def _build_round(self):
-        steps = self.cfg.local_steps
-        batch = self.cfg.batch_size
+    def _local_train(self, frozen, class_emb, tr, staged, labs, ix,
+                     n_steps=None):
+        """One client's local training (vmapped over the cohort axis),
+        shared by the full, subset, and wave programs. ``n_steps`` (a
+        traced scalar) masks the tail of the fixed-length scan for
+        heterogeneous step counts; ``None`` keeps the unmasked PR 1
+        program byte-for-byte."""
         lr = self.cfg.lr
-        strategy = self.cfg.strategy
         ccfg = self.ccfg
+        use_lora = self.cfg.strategy.use_lora
+        opt = optim.adam_init(tr)
 
-        use_lora = strategy.use_lora
+        def grad_fn(t, ixt):
+            bx, by = staged[ixt], labs[ixt]
 
+            def loss_fn(tt):
+                feat = clip_lib.encode_tokens(
+                    frozen, ccfg, bx, lora=tt.get("lora")) \
+                    if use_lora else bx
+                logits = client_lib.head_logits(
+                    frozen, tt, feat, class_emb)
+                return (losses.cross_entropy(logits, by),
+                        losses.accuracy(logits, by))
+
+            (loss, acc), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(t)
+            return g, (loss, acc)
+
+        active = None if n_steps is None else \
+            jnp.arange(ix.shape[0]) < n_steps
+        tr, opt, (ls, accs) = optim.adam_scan(
+            grad_fn, tr, opt, ix, lr=lr, grad_clip=1.0, active=active)
+        if n_steps is None:
+            return tr, ls[-1], accs[-1]
+        return tr, jnp.take(ls, n_steps - 1), jnp.take(accs, n_steps - 1)
+
+    def _train_cohort(self, global_tr, staged, labs, idx, n_steps,
+                      frozen, class_emb):
+        """Broadcast the global trainables over the cohort, train every
+        client, and return (stacked quantized deltas, loss, acc)."""
+        C = idx.shape[0]
+        cohort_tr = jax.tree.map(
+            lambda g: jnp.broadcast_to(g[None], (C,) + g.shape),
+            global_tr)
+        if n_steps is None:
+            after, loss, acc = jax.vmap(
+                lambda tr, s, l, ix: self._local_train(
+                    frozen, class_emb, tr, s, l, ix))(
+                cohort_tr, staged, labs, idx)
+        else:
+            after, loss, acc = jax.vmap(
+                lambda tr, s, l, ix, n: self._local_train(
+                    frozen, class_emb, tr, s, l, ix, n))(
+                cohort_tr, staged, labs, idx, n_steps)
+        delta = jax.tree.map(
+            lambda a, g: (a - g[None]).astype(jnp.float32),
+            after, global_tr)
+        return comm_quantize_stacked(delta, self.cfg.strategy), loss, acc
+
+    def _build_round(self):
         def round_fn(global_tr, idx, pool_staged, pool_labs, weights,
                      frozen, class_emb):
-            C = idx.shape[0]
-            cohort_tr = jax.tree.map(
-                lambda g: jnp.broadcast_to(g[None], (C,) + g.shape),
-                global_tr)
-
-            def local(tr, staged, labs, ix):
-                opt = optim.adam_init(tr)
-
-                def grad_fn(t, ixt):
-                    bx, by = staged[ixt], labs[ixt]
-
-                    def loss_fn(tt):
-                        feat = clip_lib.encode_tokens(
-                            frozen, ccfg, bx, lora=tt.get("lora")) \
-                            if use_lora else bx
-                        logits = client_lib.head_logits(
-                            frozen, tt, feat, class_emb)
-                        return (losses.cross_entropy(logits, by),
-                                losses.accuracy(logits, by))
-
-                    (loss, acc), g = jax.value_and_grad(
-                        loss_fn, has_aux=True)(t)
-                    return g, (loss, acc)
-
-                tr, opt, (ls, accs) = optim.adam_scan(
-                    grad_fn, tr, opt, ix, lr=lr, grad_clip=1.0)
-                return tr, ls[-1], accs[-1]
-
-            after, loss, acc = jax.vmap(local)(
-                cohort_tr, pool_staged, pool_labs, idx)
-            delta = jax.tree.map(
-                lambda a, g: (a - g[None]).astype(jnp.float32),
-                after, global_tr)
-            delta = comm_quantize_stacked(delta, strategy)
+            delta, loss, acc = self._train_cohort(
+                global_tr, pool_staged, pool_labs, idx, None, frozen,
+                class_emb)
             new_global = server.aggregate_stacked(global_tr, weights,
                                                   delta)
             return new_global, loss, acc
@@ -249,10 +319,130 @@ class CohortEngine:
         donate = (0,) if self.cfg.donate else ()
         return jax.jit(round_fn, donate_argnums=donate)
 
+    def _build_subset_round(self):
+        """Sync-partial round at fixed cohort width K: gather the
+        selected clients' already-staged pools (no re-upload, one compile
+        per K), train, quantize, and aggregate in-program with the
+        host-normalized subset weights."""
+        het = self._het
+
+        def round_fn(global_tr, sel, n_steps, idx, pool_staged,
+                     pool_labs, weights, frozen, class_emb):
+            staged = jnp.take(pool_staged, sel, axis=0)
+            labs = jnp.take(pool_labs, sel, axis=0)
+            delta, loss, acc = self._train_cohort(
+                global_tr, staged, labs, idx, n_steps if het else None,
+                frozen, class_emb)
+            new_global = server.aggregate_stacked(global_tr, weights,
+                                                  delta)
+            return new_global, loss, acc
+
+        donate = (0,) if self.cfg.donate else ()
+        return jax.jit(round_fn, donate_argnums=donate)
+
+    def _build_wave(self):
+        """Async wave: identical local training, but the program stops
+        before aggregation and returns the stacked quantized deltas — the
+        scheduler buffers them on the host and commits with
+        staleness-discounted weights later. No donation: the caller's
+        global trainables stay alive for the commit."""
+        het = self._het
+
+        def wave_fn(global_tr, sel, n_steps, idx, pool_staged,
+                    pool_labs, frozen, class_emb):
+            staged = jnp.take(pool_staged, sel, axis=0)
+            labs = jnp.take(pool_labs, sel, axis=0)
+            return self._train_cohort(
+                global_tr, staged, labs, idx, n_steps if het else None,
+                frozen, class_emb)
+
+        return jax.jit(wave_fn)
+
+    def _subset_inputs(self, sel, key, n_steps=None):
+        sel = np.asarray(sel, np.int32)
+        order = np.argsort(sel, kind="stable")
+        sel = sel[order]
+        if len(np.unique(sel)) != len(sel) or sel.min() < 0 or \
+                sel.max() >= self.n_clients:
+            raise ValueError(f"invalid client subset {sel}")
+        if n_steps is None:
+            n_steps = self.cfg.local_steps * self.step_mult[sel]
+        else:
+            # caller-supplied (scheduler trace) step counts, reordered
+            # with the selection sort — they are the single source of
+            # truth, so a profile the staged program cannot honor fails
+            # loudly instead of silently training different counts
+            n_steps = np.asarray(n_steps, np.int32)[order]
+            if n_steps.shape != sel.shape:
+                raise ValueError(
+                    f"n_steps shape {n_steps.shape} != sel {sel.shape}")
+            if n_steps.min() < 1 or n_steps.max() > self.max_steps:
+                raise ValueError(
+                    f"n_steps {n_steps} outside [1, {self.max_steps}] "
+                    "(engine staged with max step multiplier "
+                    f"{int(self.step_mult.max())})")
+            if not self._het and np.any(n_steps != self.cfg.local_steps):
+                raise ValueError(
+                    "engine was staged homogeneous (every client "
+                    "step_mult==1) but the scheduler requested "
+                    f"heterogeneous step counts {n_steps}; set "
+                    "Client.step_mult before building the engine")
+        sel_dev = jnp.asarray(sel)
+        lens_sel = jnp.take(self.lens, sel_dev)
+        idx = self._sample(key, lens_sel, self.max_steps,
+                           self.cfg.batch_size)
+        return sel, sel_dev, jnp.asarray(n_steps, jnp.int32), idx
+
+    def run_subset_round(self, global_tr, sel, key, n_steps=None):
+        """Sync-partial round over client positions ``sel`` (treated as a
+        set; canonicalized to sorted order so selection is
+        permutation-invariant and K=N reproduces the full round).
+        Aggregation weights are the selected clients' sample counts,
+        renormalized over the subset. ``n_steps`` optionally overrides
+        the per-client step counts (aligned with ``sel``'s order)."""
+        sel, sel_dev, n_steps, idx = self._subset_inputs(sel, key,
+                                                         n_steps)
+        K = len(sel)
+        weights = self.client_n[sel] / self.client_n[sel].sum()
+        weights = jnp.asarray(weights, jnp.float32)
+        server.check_weights(weights, K)
+        if K not in self._subset_rounds:
+            self._subset_rounds[K] = self._build_subset_round()
+        new_tr, loss, acc = self._subset_rounds[K](
+            global_tr, sel_dev, n_steps, idx, self.pool_staged,
+            self.pool_labs, weights, self.frozen, self.class_emb)
+        return new_tr, {
+            "loss": np.asarray(loss), "acc": np.asarray(acc),
+            "uplink_bytes": K * self.per_client_uplink_bytes(global_tr),
+            "sel": sel}
+
+    def run_wave(self, global_tr, sel, key, n_steps=None):
+        """Train client positions ``sel`` from ``global_tr`` without
+        committing: returns (stacked quantized delta tree, metrics).
+        Slice per-client updates out with ``slice_client_delta``."""
+        sel, sel_dev, n_steps, idx = self._subset_inputs(sel, key,
+                                                         n_steps)
+        K = len(sel)
+        if K not in self._wave_rounds:
+            self._wave_rounds[K] = self._build_wave()
+        delta, loss, acc = self._wave_rounds[K](
+            global_tr, sel_dev, n_steps, idx, self.pool_staged,
+            self.pool_labs, self.frozen, self.class_emb)
+        return delta, {
+            "loss": np.asarray(loss), "acc": np.asarray(acc),
+            "uplink_bytes": K * self.per_client_uplink_bytes(global_tr),
+            "sel": sel}
+
     def run_round(self, global_tr, key):
-        """Advance one federated round. Returns (new_global_trainables,
-        metrics) where metrics carries per-client last-step loss/acc and
-        the round's uplink byte count."""
+        """Advance one full-cohort federated round. Returns
+        (new_global_trainables, metrics) where metrics carries per-client
+        last-step loss/acc and the round's uplink byte count."""
+        if self._het:
+            raise ValueError(
+                "run_round is the homogeneous (unmasked) full-cohort "
+                f"program, but clients carry step_mult {self.step_mult}"
+                " — use run_subset_round(sel=arange(n_clients)) so the "
+                "masked scan honors the heterogeneous step counts")
         uplink = self.uplink_bytes(global_tr)
         idx = self._sample(key, self.lens, self.cfg.local_steps,
                            self.cfg.batch_size)

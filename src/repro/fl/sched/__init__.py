@@ -1,0 +1,64 @@
+"""Federated round scheduler: who trains when, and how updates land.
+
+This subsystem sits between the simulator (``fl.simulator``) and the
+round executors (the fused cohort engine ``fl.cohort``, or the
+sequential per-client oracle) and turns "run R rounds" into an explicit
+participation policy. Three policies share one API:
+
+ - ``Scheduler.select(rnd, key) -> Cohort`` — pick the participating
+   client subset for the next commit: positions (sorted — a cohort is a
+   set), per-client local-step counts (availability-trace multipliers),
+   and the server-version staleness of each update's base model.
+ - ``Scheduler.commit(global_tr, updates, round_tag)`` — land the
+   updates. Sync policies land *inside* the fused round dispatch
+   (weighted FedAvg over the subset, weights renormalized sample
+   counts); the async policy buffers per-client deltas and commits M at
+   a time with staleness-discounted weights ``w_i ∝ m_i (1+τ_i)^(-β)``
+   (FedBuff). At β=0 this is exactly sample-count FedAvg over the
+   buffer.
+ - ``Scheduler.step(global_tr, rnd, key)`` — the driver the simulator
+   calls once per History row: one sync round or one async buffer
+   flush. ``Scheduler.warmup`` compiles every fused program the policy
+   will dispatch (on throwaway copies) so round timing is steady-state.
+
+Policies:
+
+ - ``full-sync`` (``FullSyncScheduler``) — every client every round;
+   the pre-scheduler behavior expressed as the degenerate sync-partial
+   policy (K=N, identity selection), so ``run_federated`` has exactly
+   one engine path.
+ - ``sync-partial`` (``SyncPartialScheduler``) — K of N clients per
+   round, sampled uniformly or availability-trace-weighted, run as one
+   fused subset round: the engine gathers the selected rows of the
+   already-device-staged padded pools (no re-upload), at fixed cohort
+   width K (one compile per K).
+ - ``async`` (``AsyncBufferedScheduler``) — FedBuff-style buffered
+   asynchrony on a deterministic virtual clock (``events.EventQueue``):
+   trace-driven finish times, fused cohort *waves* per dispatch batch,
+   staleness-discounted commits, freed slots back-filled by
+   availability-weighted draws from the idle population.
+
+Invariants (see ROADMAP "Scheduler subsystem (PR 2)"): selection and
+event times are drawn with ``jax.random`` on replicated host inputs
+(mesh-invariant); subset rounds reuse the engine's staged pools and
+batch-sampling key discipline so the sequential oracle reproduces them
+exactly; quantization stays leading-axis-inert, so per-round uplink
+bytes are exactly ``K x per-client payload``.
+"""
+from repro.fl.sched.events import EventQueue
+from repro.fl.sched.policies import (AsyncBufferedScheduler, Cohort,
+                                     CohortExec, FullSyncScheduler,
+                                     Scheduler, SequentialExec,
+                                     SyncPartialScheduler,
+                                     make_scheduler, stack_client_deltas,
+                                     staleness_weights)
+from repro.fl.sched.traces import (AvailabilityTrace, resolve_trace,
+                                   skewed_trace, uniform_trace)
+
+__all__ = [
+    "AsyncBufferedScheduler", "AvailabilityTrace", "Cohort",
+    "CohortExec", "EventQueue", "FullSyncScheduler", "Scheduler",
+    "SequentialExec", "SyncPartialScheduler", "make_scheduler",
+    "resolve_trace", "skewed_trace", "stack_client_deltas",
+    "staleness_weights", "uniform_trace",
+]

@@ -1,0 +1,39 @@
+"""Deterministic virtual-time event queue for the async scheduler.
+
+Simulated wall-clock only ever advances by popping the earliest pending
+client-finish event — no real timers, no threads — so an async run is a
+pure function of (seed, trace, config). Ties are broken by a
+monotonically increasing push sequence number, which makes pop order
+(and therefore buffer fill order, staleness, and the whole training
+trajectory) bit-reproducible.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Tuple
+
+
+class EventQueue:
+    """Min-heap of (time, seq, cid) client-finish events with a
+    monotonic virtual clock ``now``."""
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, int]] = []
+        self._seq = 0
+        self.now = 0.0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, time: float, cid: int) -> None:
+        if time < self.now:
+            raise ValueError(
+                f"event at t={time} is in the past (now={self.now})")
+        heapq.heappush(self._heap, (float(time), self._seq, int(cid)))
+        self._seq += 1
+
+    def pop(self) -> Tuple[float, int]:
+        """Pop the earliest (time, cid) and advance the clock."""
+        t, _, cid = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        return t, cid

@@ -1,0 +1,520 @@
+"""Round-scheduler policies: who trains when, and how updates land.
+
+A ``Scheduler`` sits between the simulator and the round executor and
+factors a federated run into three verbs:
+
+ - ``select(rnd, key) -> Cohort``: pick the participating client subset
+   (and their per-client step counts / staleness tags) for the next
+   commit. All randomness is drawn with ``jax.random`` on replicated
+   host inputs — selection and event times are mesh-invariant, like the
+   engine's batch sampling.
+ - execution: the policy drives its executor — the fused cohort engine
+   (``CohortExec``) or the per-client reference loop
+   (``SequentialExec``) — in fixed-width cohort calls so device
+   efficiency is independent of the policy.
+ - ``commit(global_tr, updates, round_tag)``: land the updates. The
+   sync policies land in-program (weighted FedAvg fused into the round
+   dispatch, weights renormalized over the subset); the async policy
+   buffers per-client deltas and commits M at a time with
+   staleness-discounted weights ``w_i ∝ m_i (1+τ_i)^(-β)``.
+
+``step(global_tr, rnd, key)`` is the driver the simulator calls once per
+History row: one sync round, or one async buffer flush.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QTensor
+from repro.fl import cohort as cohort_lib
+from repro.fl import server
+from repro.fl.sched.events import EventQueue
+from repro.fl.sched.traces import AvailabilityTrace, resolve_trace
+
+# fold_in tags separating the per-round key into independent streams:
+# batch indices use the raw round key (so sync-partial at K=N draws the
+# exact batches of the PR 1 full round), selection/event jitter fold.
+_SEL_TAG = 101
+_DISPATCH_TAG = 103
+_JITTER_TAG = 107
+
+
+@dataclass(frozen=True)
+class Cohort:
+    """One scheduled unit of local work: client positions (sorted — a
+    subset is a set, so K=N canonicalizes to the identity), their local
+    step counts, and the server-version staleness of their base model."""
+    sel: np.ndarray
+    n_steps: np.ndarray
+    staleness: np.ndarray
+
+    @property
+    def k(self) -> int:
+        return len(self.sel)
+
+
+def staleness_weights(masses, staleness, beta: float) -> np.ndarray:
+    """FedBuff-style discounted aggregation weights
+    ``w_i ∝ m_i (1+τ_i)^(-β)``, normalized to sum 1. At β=0 this is
+    exactly the sample-count FedAvg weighting over the buffer."""
+    m = np.asarray(masses, np.float64)
+    tau = np.asarray(staleness, np.float64)
+    w = m * (1.0 + tau) ** (-float(beta))
+    total = w.sum()
+    if not np.isfinite(total) or total <= 0:
+        raise ValueError(
+            f"degenerate staleness weights: masses={m}, tau={tau}")
+    return (w / total).astype(np.float32)
+
+
+# ---------------------------------------------------------------------
+# executors: how a scheduled cohort actually trains
+# ---------------------------------------------------------------------
+
+def stack_client_deltas(deltas: Sequence):
+    """Restack per-client delta trees (as produced by
+    ``cohort.slice_client_delta``) along a fresh leading cohort axis,
+    keeping QTensor metadata consistent with ``comm_quantize_stacked``
+    output so ``server.aggregate_stacked`` sees the usual layout."""
+    def f(*leaves):
+        l0 = leaves[0]
+        if isinstance(l0, QTensor):
+            return QTensor(
+                q=jnp.stack([l.q for l in leaves]),
+                scales=jnp.stack([l.scales for l in leaves]),
+                bits=l0.bits, mode=l0.mode, block=l0.block,
+                out_dtype=l0.out_dtype,
+                orig_shape=(len(leaves),) + tuple(l0.orig_shape))
+        return jnp.stack(leaves)
+
+    return jax.tree.map(f, *deltas,
+                        is_leaf=lambda l: isinstance(l, QTensor))
+
+
+class CohortExec:
+    """Fused-engine executor: one jitted dispatch per cohort call."""
+    kind = "cohort"
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def run_sync(self, global_tr, cohort: Cohort, key):
+        return self.engine.run_subset_round(global_tr, cohort.sel, key,
+                                            n_steps=cohort.n_steps)
+
+    def run_full(self, global_tr, key):
+        """PR 1's gather-free full-cohort program (homogeneous steps
+        only) — avoids the runtime ``pool_staged[sel]`` device copy the
+        subset program pays for selection."""
+        return self.engine.run_round(global_tr, key)
+
+    def run_wave(self, global_tr, cohort: Cohort, key):
+        delta, m = self.engine.run_wave(global_tr, cohort.sel, key,
+                                        n_steps=cohort.n_steps)
+        slices = [cohort_lib.slice_client_delta(delta, j)
+                  for j in range(cohort.k)]
+        return slices, m
+
+    def commit_buffer(self, global_tr, weights, deltas):
+        return server.aggregate_stacked(
+            global_tr, jnp.asarray(weights, jnp.float32),
+            stack_client_deltas(deltas))
+
+
+class SequentialExec:
+    """Reference executor: per-client Python loop over
+    ``Client.local_train``, driven by the *same* jax.random batch-index
+    sequence as the fused engine (``cohort.round_indices``), so the two
+    executors are parity oracles for each other under every policy."""
+    kind = "sequential"
+
+    def __init__(self, *, clients, frozen, ccfg, class_emb, local_steps,
+                 batch_size, lr):
+        self.clients = list(clients)
+        self.frozen = frozen
+        self.ccfg = ccfg
+        self.class_emb = class_emb
+        self.local_steps = local_steps
+        self.batch_size = batch_size
+        self.lr = lr
+        self.lens = np.asarray(
+            [len(c.pool()[1]) for c in self.clients], np.int64)
+        self.max_steps = local_steps * max(
+            c.local_steps_for(1) for c in self.clients)
+
+    def _train(self, global_tr, cohort: Cohort, key):
+        idx = cohort_lib.round_indices(
+            key, self.lens[cohort.sel], self.max_steps, self.batch_size)
+        if int(np.max(cohort.n_steps)) > self.max_steps:
+            # mirror the cohort executor's loud failure: a step profile
+            # the sampled batch-index layout cannot honor must not
+            # silently truncate (executor parity)
+            raise ValueError(
+                f"n_steps {cohort.n_steps} exceed the staged maximum "
+                f"{self.max_steps}; set Client.step_mult to match the "
+                "trace before building the executor")
+        outs = []
+        for j, ci in enumerate(np.asarray(cohort.sel)):
+            c = self.clients[int(ci)]
+            n_j = int(cohort.n_steps[j])
+            tr_after, m = c.local_train(
+                self.frozen, global_tr, self.class_emb, self.ccfg,
+                steps=n_j, batch_size=self.batch_size, lr=self.lr,
+                indices=idx[j][:n_j])
+            upd, nbytes = c.make_update(global_tr, tr_after)
+            outs.append((c, upd, nbytes, m))
+        metrics = {
+            "loss": np.asarray([o[3]["loss"] for o in outs]),
+            "acc": np.asarray([o[3]["acc"] for o in outs]),
+            "uplink_bytes": int(sum(o[2] for o in outs)),
+            "sel": np.asarray(cohort.sel)}
+        return outs, metrics
+
+    def run_sync(self, global_tr, cohort: Cohort, key):
+        outs, metrics = self._train(global_tr, cohort, key)
+        new_tr = server.aggregate(
+            global_tr, [(o[0].n, o[1]) for o in outs])
+        return new_tr, metrics
+
+    def run_wave(self, global_tr, cohort: Cohort, key):
+        outs, metrics = self._train(global_tr, cohort, key)
+        return [o[1] for o in outs], metrics
+
+    def commit_buffer(self, global_tr, weights, deltas):
+        # server.aggregate renormalizes masses; the discounted weights
+        # already sum to 1, so they pass through unchanged.
+        return server.aggregate(
+            global_tr, list(zip(np.asarray(weights, np.float64),
+                                deltas)))
+
+
+# ---------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------
+
+class Scheduler:
+    """Base policy machinery. Subclasses implement ``select`` and (for
+    buffered policies) ``commit``; ``step`` is the simulator-facing
+    driver producing exactly one committed aggregation per call."""
+    name = "base"
+
+    def __init__(self, *, executor, trace: AvailabilityTrace,
+                 local_steps: int, clients_per_round: int = 0):
+        self.exec = executor
+        self.trace = trace
+        self.local_steps = local_steps
+        self.n = trace.n
+        k = clients_per_round or self.n
+        if not (1 <= k <= self.n):
+            raise ValueError(
+                f"clients_per_round={clients_per_round} out of range for "
+                f"{self.n} active clients")
+        self.k = k
+        self._mult = np.asarray(trace.step_mult, np.int32)
+
+    # -- helpers ------------------------------------------------------
+    def _cohort_for(self, sel, staleness=None) -> Cohort:
+        sel = np.asarray(sel, np.int32)
+        order = np.argsort(sel, kind="stable")
+        sel = sel[order]
+        stal = np.zeros(len(sel), np.int32) if staleness is None else \
+            np.asarray(staleness, np.int32)[order]
+        return Cohort(sel=sel,
+                      n_steps=self.local_steps * self._mult[sel],
+                      staleness=stal)
+
+    def _draw_clients(self, key, k: int) -> np.ndarray:
+        """Availability-weighted draw of k distinct client positions, on
+        replicated inputs (mesh-invariant)."""
+        if k >= self.n:
+            return np.arange(self.n, dtype=np.int32)
+        probs = self.trace.selection_probs()
+        return np.asarray(jax.random.choice(
+            key, self.n, (k,), replace=False, p=jnp.asarray(probs)),
+            np.int32)
+
+    # -- policy surface ----------------------------------------------
+    def select(self, rnd: int, key) -> Cohort:
+        raise NotImplementedError
+
+    def commit(self, global_tr, updates, round_tag):
+        """Land updates. Sync policies aggregate inside the fused round
+        dispatch, so their commit is pure bookkeeping (identity)."""
+        return global_tr
+
+    def step(self, global_tr, rnd: int, key):
+        raise NotImplementedError
+
+    def warmup(self, global_tr, key=None):
+        """Compile/warm every fused program this policy dispatches, on a
+        throwaway copy of the global trainables (donation-safe), without
+        advancing any scheduler state. Called once before timing starts
+        so ``History.round_time_s`` is steady-state.
+
+        Warmup *executes* one throwaway round per program rather than
+        AOT-lowering: on this jax, ``jit(f).lower(...).compile()`` does
+        not populate the call-path cache, so the first real round would
+        recompile anyway. The discarded execution is compile-dominated
+        for every config this repo runs."""
+        raise NotImplementedError
+
+
+class SyncPartialScheduler(Scheduler):
+    """Sample K of N clients per round (availability-weighted) and run
+    them as one fused subset round; the update lands in-program with
+    subset-renormalized FedAvg weights. K=N with a uniform trace is the
+    degenerate full-sync policy and reproduces the PR 1 full-cohort
+    round exactly (same batch key, identity selection)."""
+    name = "sync-partial"
+
+    def select(self, rnd: int, key) -> Cohort:
+        return self._cohort_for(
+            self._draw_clients(jax.random.fold_in(key, _SEL_TAG),
+                               self.k))
+
+    def step(self, global_tr, rnd: int, key):
+        cohort = self.select(rnd, key)
+        new_tr, m = self.exec.run_sync(global_tr, cohort, key)
+        new_tr = self.commit(new_tr, None, rnd)
+        m = dict(m, participation=cohort.sel,
+                 staleness=cohort.staleness, vtime=float(rnd + 1))
+        return new_tr, m
+
+    def warmup(self, global_tr, key=None):
+        if self.exec.kind != "cohort":
+            return    # the sequential oracle has no fused round program
+        key = jax.random.PRNGKey(0) if key is None else key
+        cohort = self._cohort_for(np.arange(self.k, dtype=np.int32))
+        copy = jax.tree.map(jnp.copy, global_tr)
+        out = self.exec.run_sync(copy, cohort, key)
+        jax.block_until_ready(jax.tree.leaves(out[0]))
+
+
+class FullSyncScheduler(SyncPartialScheduler):
+    """Every client, every round — the pre-scheduler behavior expressed
+    as the degenerate sync-partial policy (K=N, identity selection).
+    With a homogeneous step profile it dispatches PR 1's gather-free
+    full-round program (bit-identical to the K=N subset program — see
+    tests — minus the runtime gather's device copy of the staged
+    pools)."""
+    name = "full-sync"
+
+    def __init__(self, *, executor, trace, local_steps):
+        super().__init__(executor=executor, trace=trace,
+                         local_steps=local_steps, clients_per_round=0)
+
+    def select(self, rnd: int, key) -> Cohort:
+        return self._cohort_for(np.arange(self.n, dtype=np.int32))
+
+    def _gather_free(self) -> bool:
+        return self.exec.kind == "cohort" and int(self._mult.max()) == 1
+
+    def step(self, global_tr, rnd: int, key):
+        if not self._gather_free():
+            return super().step(global_tr, rnd, key)
+        cohort = self.select(rnd, key)
+        new_tr, m = self.exec.run_full(global_tr, key)
+        m = dict(m, participation=cohort.sel,
+                 staleness=cohort.staleness, vtime=float(rnd + 1))
+        return new_tr, m
+
+    def warmup(self, global_tr, key=None):
+        if not self._gather_free():
+            return super().warmup(global_tr, key)
+        key = jax.random.PRNGKey(0) if key is None else key
+        copy = jax.tree.map(jnp.copy, global_tr)
+        out = self.exec.run_full(copy, key)
+        jax.block_until_ready(jax.tree.leaves(out[0]))
+
+
+class AsyncBufferedScheduler(Scheduler):
+    """FedBuff-style asynchronous aggregation on a virtual clock.
+
+    ``concurrency`` clients train at once; each dispatched job finishes
+    ``speed[i] * n_steps_i * (1 + jitter)`` virtual seconds later
+    (jitter is a small key-derived uniform, drawn replicated). Finished
+    updates enter a buffer with staleness ``τ = server_version -
+    base_version``; when the buffer holds ``buffer_size`` updates the
+    server commits them with weights ``w_i ∝ m_i (1+τ_i)^(-β)``, then
+    back-fills the freed slots with an availability-weighted draw from
+    the *idle* population (clients neither in flight nor buffered — the
+    just-committed ones are eligible again, and clients outside the
+    initial draw rotate in), dispatched from the new global model. Local
+    training still runs as fused cohort *waves* — every dispatch batch
+    shares its base model, so one jitted program of width
+    ``concurrency`` (initial wave) and one of width ``buffer_size``
+    (steady state) cover the whole run. One ``step`` = one commit = one
+    History row.
+    """
+    name = "async"
+
+    def __init__(self, *, executor, trace, local_steps,
+                 clients_per_round: int = 0, staleness_beta: float = 0.5,
+                 concurrency: int = 0, client_n: Sequence[float]):
+        super().__init__(executor=executor, trace=trace,
+                         local_steps=local_steps,
+                         clients_per_round=clients_per_round)
+        self.buffer_size = self.k
+        self.concurrency = min(self.n, concurrency or 2 * self.k)
+        if self.concurrency < self.buffer_size:
+            raise ValueError(
+                f"async concurrency {self.concurrency} below buffer "
+                f"size {self.buffer_size}: the buffer could never fill")
+        self.beta = float(staleness_beta)
+        self.client_n = np.asarray(client_n, np.float64)
+        self.queue = EventQueue()
+        self.version = 0
+        self._inflight: Dict[int, dict] = {}
+        self._buffer: List[dict] = []
+        self._started = False
+
+    # -- event-loop internals -----------------------------------------
+    def _durations(self, sel: np.ndarray, n_steps: np.ndarray, key):
+        u = np.asarray(jax.random.uniform(
+            jax.random.fold_in(key, _JITTER_TAG), (len(sel),)))
+        speed = np.asarray(self.trace.speed)[sel]
+        return speed * np.asarray(n_steps, np.float64) * (1.0 + 0.1 * u)
+
+    def _dispatch(self, global_tr, sel, key):
+        """Run one fused wave for ``sel`` from the current global model
+        and schedule their finish events."""
+        cohort = self._cohort_for(sel)
+        deltas, m = self.exec.run_wave(global_tr, cohort, key)
+        durations = self._durations(cohort.sel, cohort.n_steps, key)
+        for j, ci in enumerate(cohort.sel):
+            ci = int(ci)
+            self.queue.push(self.queue.now + float(durations[j]), ci)
+            self._inflight[ci] = {
+                "delta": deltas[j], "base_version": self.version,
+                "loss": float(m["loss"][j]), "acc": float(m["acc"][j]),
+                "bytes": m["uplink_bytes"] // cohort.k}
+
+    def _fill_buffer(self):
+        """Drain finish events until the buffer holds ``buffer_size``
+        updates. Buffer order is finish order (deterministic: virtual
+        time, then push sequence). Idempotent once full."""
+        while len(self._buffer) < self.buffer_size:
+            if not len(self.queue):
+                raise RuntimeError(
+                    "async event queue drained with an unfilled buffer "
+                    "(concurrency < buffer size, or select() called "
+                    "before the first step dispatched work?)")
+            t, cid = self.queue.pop()
+            job = self._inflight.pop(cid)
+            self._buffer.append(dict(job, cid=cid,
+                                     tau=self.version -
+                                     job["base_version"], finish=t))
+
+    def _backfill_draw(self, key) -> np.ndarray:
+        """Pick ``buffer_size`` idle clients (not in flight, not
+        buffered) to dispatch next, availability-weighted — the freed
+        slots rotate across the whole population, not just the clients
+        that happened to start first."""
+        busy = set(self._inflight) | {e["cid"] for e in self._buffer}
+        idle = np.asarray([i for i in range(self.n) if i not in busy],
+                          np.int32)
+        k = self.buffer_size
+        if len(idle) < k:
+            raise RuntimeError(
+                f"{len(idle)} idle clients cannot back-fill {k} slots")
+        if len(idle) == k:
+            return idle
+        probs = np.asarray(self.trace.availability, np.float64)[idle]
+        pick = jax.random.choice(
+            key, len(idle), (k,), replace=False,
+            p=jnp.asarray(probs / probs.sum()))
+        return idle[np.asarray(pick)]
+
+    def select(self, rnd: int, key) -> Cohort:
+        """View of the next commit's cohort (fills the buffer from
+        pending finish events; no dispatch happens here, so repeated
+        calls between commits return the same cohort)."""
+        self._fill_buffer()
+        entries = self._buffer[:self.buffer_size]
+        return self._cohort_for([e["cid"] for e in entries],
+                                staleness=[e["tau"] for e in entries])
+
+    def commit(self, global_tr, updates, round_tag):
+        """Staleness-discounted buffer flush: w_i ∝ m_i (1+τ_i)^(-β),
+        applied in the buffer's finish order."""
+        entries = updates
+        w = staleness_weights(
+            self.client_n[[e["cid"] for e in entries]],
+            [e["tau"] for e in entries], self.beta)
+        new_tr = self.exec.commit_buffer(
+            global_tr, w, [e["delta"] for e in entries])
+        self.version += 1
+        return new_tr
+
+    def step(self, global_tr, rnd: int, key):
+        if not self._started:
+            sel = self._draw_clients(
+                jax.random.fold_in(key, _SEL_TAG), self.concurrency)
+            self._dispatch(global_tr, sel,
+                           jax.random.fold_in(key, _DISPATCH_TAG))
+            self._started = True
+        self._fill_buffer()
+        entries = self._buffer[:self.buffer_size]
+        self._buffer = self._buffer[self.buffer_size:]
+        new_tr = self.commit(global_tr, entries, rnd)
+        # back-fill the freed slots from the idle population (the
+        # committed clients plus anyone not yet started), training from
+        # the new global at the current virtual time
+        sel = self._backfill_draw(jax.random.fold_in(key, _SEL_TAG + 1))
+        self._dispatch(new_tr, sel,
+                       jax.random.fold_in(key, _DISPATCH_TAG + 1))
+        m = {
+            "loss": np.asarray([e["loss"] for e in entries]),
+            "acc": np.asarray([e["acc"] for e in entries]),
+            "uplink_bytes": int(sum(e["bytes"] for e in entries)),
+            "participation": np.asarray([e["cid"] for e in entries],
+                                        np.int32),
+            "staleness": np.asarray([e["tau"] for e in entries],
+                                    np.int32),
+            "vtime": float(self.queue.now)}
+        return new_tr, m
+
+    def warmup(self, global_tr, key=None):
+        if self.exec.kind != "cohort":
+            return
+        key = jax.random.PRNGKey(0) if key is None else key
+        copy = jax.tree.map(jnp.copy, global_tr)
+        for width in sorted({self.concurrency, self.buffer_size}):
+            cohort = self._cohort_for(np.arange(width, dtype=np.int32))
+            deltas, _ = self.exec.run_wave(copy, cohort, key)
+            jax.block_until_ready(jax.tree.leaves(deltas))
+        # the commit path is eager (host aggregation); nothing to warm.
+
+
+def make_scheduler(participation: str, *, executor, trace,
+                   local_steps: int, clients_per_round: int = 0,
+                   staleness_beta: float = 0.5, concurrency: int = 0,
+                   client_n: Optional[Sequence[float]] = None):
+    """Policy factory keyed by ``FLConfig.participation``."""
+    if participation == "full":
+        if clients_per_round not in (0, trace.n):
+            raise ValueError(
+                f"clients_per_round={clients_per_round} is meaningless "
+                "for participation='full' (every client trains every "
+                "round) — use 'sync-partial' or 'async'")
+        return FullSyncScheduler(executor=executor, trace=trace,
+                                 local_steps=local_steps)
+    if participation == "sync-partial":
+        return SyncPartialScheduler(
+            executor=executor, trace=trace, local_steps=local_steps,
+            clients_per_round=clients_per_round)
+    if participation == "async":
+        if client_n is None:
+            raise ValueError("async scheduling needs per-client sample "
+                             "counts (client_n) for FedBuff weighting")
+        return AsyncBufferedScheduler(
+            executor=executor, trace=trace, local_steps=local_steps,
+            clients_per_round=clients_per_round,
+            staleness_beta=staleness_beta, concurrency=concurrency,
+            client_n=client_n)
+    raise ValueError(f"unknown participation policy {participation!r}")

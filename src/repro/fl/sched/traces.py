@@ -1,0 +1,105 @@
+"""Client availability / heterogeneity traces for the round scheduler.
+
+Cross-device FL populations are not uniform: devices differ in how often
+they are reachable (selection propensity), how fast they train (virtual
+wall-clock per local step), and how much local compute they are willing
+to spend (local-step multiplier). A trace bundles those three per-client
+vectors; the scheduler policies consume them as follows:
+
+ - ``availability`` — sync-partial samples K of N clients with
+   probability proportional to it; async uses it to pick which clients
+   start training first when concurrency is below N.
+ - ``speed`` — async's virtual-time event loop finishes client i's job
+   ``speed[i] * local_steps_i`` virtual seconds after dispatch (plus a
+   small key-derived jitter drawn in a replicated dispatch, so event
+   times are mesh-invariant like every other random draw in the engine).
+ - ``step_mult`` — client i runs ``local_steps * step_mult[i]`` local
+   steps, clipped to ``strategies.MAX_STEP_MULT`` so the fused cohort
+   scan keeps a bounded static length.
+
+Traces are plain numpy, deterministic in (n, seed), and never touch the
+device: they are *simulation inputs*, not learned state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.fl.strategies import MAX_STEP_MULT
+
+
+@dataclass(frozen=True)
+class AvailabilityTrace:
+    availability: np.ndarray   # (n,) float > 0, selection propensity
+    speed: np.ndarray          # (n,) float > 0, virtual secs / local step
+    step_mult: np.ndarray      # (n,) int in [1, MAX_STEP_MULT]
+    name: str = "custom"
+
+    def __post_init__(self):
+        n = len(self.availability)
+        if not (len(self.speed) == len(self.step_mult) == n):
+            raise ValueError("trace vectors disagree on n_clients")
+        if np.any(np.asarray(self.availability) <= 0) or \
+                np.any(np.asarray(self.speed) <= 0):
+            raise ValueError("availability and speed must be positive")
+        m = np.asarray(self.step_mult)
+        if np.any(m < 1) or np.any(m > MAX_STEP_MULT):
+            raise ValueError(
+                f"step_mult must lie in [1, {MAX_STEP_MULT}], got {m}")
+
+    @property
+    def n(self) -> int:
+        return len(self.availability)
+
+    def selection_probs(self) -> np.ndarray:
+        a = np.asarray(self.availability, np.float64)
+        return (a / a.sum()).astype(np.float64)
+
+
+def uniform_trace(n: int) -> AvailabilityTrace:
+    """Idealized population: always available, unit speed, homogeneous
+    local steps — the degenerate trace under which sync-partial at K=N
+    reproduces the PR 1 full-cohort round exactly."""
+    return AvailabilityTrace(
+        availability=np.ones(n, np.float64),
+        speed=np.ones(n, np.float64),
+        step_mult=np.ones(n, np.int32),
+        name="uniform")
+
+
+def skewed_trace(n: int, seed: int = 0, *, zipf: float = 1.2,
+                 speed_sigma: float = 0.6,
+                 max_step_mult: int = 1) -> AvailabilityTrace:
+    """Long-tail population: Zipf-distributed availability (a few clients
+    dominate participation), lognormal speeds (stragglers several times
+    slower than the median), and optional heterogeneous local-step
+    multipliers. Deterministic in (n, seed)."""
+    rs = np.random.RandomState(seed)
+    avail = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** zipf
+    rs.shuffle(avail)
+    speed = np.exp(rs.normal(0.0, speed_sigma, n))
+    mmax = int(np.clip(max_step_mult, 1, MAX_STEP_MULT))
+    mult = rs.randint(1, mmax + 1, n).astype(np.int32)
+    return AvailabilityTrace(availability=avail, speed=speed,
+                             step_mult=mult, name=f"skewed(seed={seed})")
+
+
+def resolve_trace(spec, n: int, *, seed: int = 0) -> AvailabilityTrace:
+    """Accept None | "uniform" | "skewed" | "skewed-het" |
+    AvailabilityTrace (validated against n). FLConfig.trace routes
+    through here; "skewed-het" adds heterogeneous local-step multipliers
+    (up to MAX_STEP_MULT) on top of the skewed availability/speed
+    profile, exercising the masked-scan path from the public config."""
+    if spec is None or spec == "uniform":
+        return uniform_trace(n)
+    if spec == "skewed":
+        return skewed_trace(n, seed=seed)
+    if spec == "skewed-het":
+        return skewed_trace(n, seed=seed, max_step_mult=MAX_STEP_MULT)
+    if isinstance(spec, AvailabilityTrace):
+        if spec.n != n:
+            raise ValueError(
+                f"trace built for {spec.n} clients, population has {n}")
+        return spec
+    raise ValueError(f"unknown trace spec {spec!r}")

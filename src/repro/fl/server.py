@@ -13,18 +13,56 @@ from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quant import QTensor, dequantize, dequantize_tree
 
 
-def aggregate(global_trainable, updates: Sequence[Tuple[int, object]]):
-    """updates: list of (m_i = client sample count, delta tree)."""
-    total = float(sum(m for m, _ in updates))
+def check_weights(weights, n_updates: int):
+    """Shared guard for ``aggregate`` / ``aggregate_stacked``: a
+    mis-shaped or mis-normalized aggregation-weight vector silently
+    rescales every update, so fail loudly instead. Shape is checked even
+    under tracing (shapes are static); the numeric normalization check
+    runs only on concrete host values — jitted callers (the fused cohort
+    round) validate the weights host-side before dispatch.
+    """
+    shape = np.shape(weights)
+    if shape != (n_updates,):
+        raise ValueError(
+            f"aggregation weights shape {shape} != ({n_updates},) — one "
+            "weight per committed update")
+    if isinstance(weights, jax.core.Tracer):
+        return
+    w = np.asarray(weights, np.float64)
+    if not np.all(np.isfinite(w)) or np.any(w < 0):
+        raise ValueError(f"aggregation weights must be finite and >= 0, "
+                         f"got {w}")
+    if abs(float(w.sum()) - 1.0) > 1e-3:
+        raise ValueError(
+            f"aggregation weights sum to {w.sum():.6f}, expected 1 "
+            "(normalize m_i / sum m_j, or the staleness-discounted "
+            "equivalent, before aggregating)")
+
+
+def aggregate(global_trainable, updates: Sequence[Tuple[float, object]]):
+    """updates: list of (m_i, delta tree) — m_i is the client sample
+    count (plain FedAvg) or any non-negative importance mass (the async
+    scheduler passes staleness-discounted masses); weights are m_i
+    normalized over the committed set."""
+    masses = [float(m) for m, _ in updates]
+    total = sum(masses)
+    if not updates or total <= 0 or not np.all(np.isfinite(masses)) or \
+            min(masses) < 0:
+        raise ValueError(
+            f"aggregate needs non-negative finite masses with a positive "
+            f"total, got {masses}")
+    ws = np.asarray(masses, np.float64) / total
+    check_weights(ws.astype(np.float32), len(updates))
     acc = None
-    for m, delta in updates:
+    for w, (_, delta) in zip(ws, updates):
         d = dequantize_tree(delta, jnp.float32)
-        w = m / total
-        acc = jax.tree.map(lambda x, a=None: w * x, d) if acc is None else \
+        w = float(w)
+        acc = jax.tree.map(lambda x: w * x, d) if acc is None else \
             jax.tree.map(lambda a, x: a + w * x, acc, d)
     return jax.tree.map(lambda g, a: (g.astype(jnp.float32) + a).astype(
         g.dtype), global_trainable, acc)
@@ -34,10 +72,21 @@ def aggregate_stacked(global_trainable, weights, stacked_delta):
     """Batched FedAvg for the cohort engine: every delta leaf carries a
     leading cohort axis (possibly blockwise-quantized along its trailing
     dims), and the weighted sum is one ``tensordot`` per leaf instead of
-    a Python loop over clients. Runs inside the jitted cohort round.
+    a Python loop over clients. Runs inside the jitted cohort round, and
+    eagerly in the async scheduler's buffer commit.
 
-    ``weights`` — (n_clients,) float32, already normalized (m_i / Σ m_j).
+    ``weights`` — (n_clients,) float32, already normalized (m_i / Σ m_j
+    or the staleness-discounted equivalent).
     """
+    leaves = jax.tree.leaves(stacked_delta,
+                             is_leaf=lambda l: isinstance(l, QTensor))
+    n = leaves[0].shape[0] if leaves else 0
+    for l in leaves:
+        if l.shape[0] != n:
+            raise ValueError("stacked delta leaves disagree on the "
+                             f"cohort axis: {l.shape[0]} vs {n}")
+    check_weights(weights, n)
+
     def reduce_leaf(d):
         x = dequantize(d, jnp.float32) if isinstance(d, QTensor) else \
             d.astype(jnp.float32)

@@ -9,14 +9,21 @@ server accuracy, per-client loss/acc, uplink bytes, and a GPU-util proxy
 
 Round execution defaults to the batched cohort engine (``fl.cohort``):
 one jitted, buffer-donated device call per round. ``engine="sequential"``
-keeps the original per-client Python loop as the reference oracle.
+keeps the original per-client Python loop as the reference oracle — both
+executors are driven by the same jax.random batch-index sequence.
+
+Participation is a scheduler policy (``fl.sched``): ``participation``
+selects full-sync (every client, the degenerate policy), sync-partial
+(K of N per round, availability-weighted), or async FedBuff-style
+buffered aggregation with staleness-discounted weights on a virtual
+clock. ``run_federated`` has exactly one round path — ``Scheduler.step``.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Dict, List
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +36,7 @@ from repro.data.synthetic import class_tokens, make_dataset, make_eval_set
 from repro.fl import client as client_lib
 from repro.fl import cohort as cohort_lib
 from repro.fl import partition, server
+from repro.fl import sched as sched_lib
 from repro.fl.strategies import STRATEGIES, Strategy
 
 
@@ -48,6 +56,14 @@ class FLConfig:
     seed: int = 0
     eval_every: int = 1
     engine: str = "cohort"        # "cohort" | "sequential"
+    # scheduler (fl.sched): who trains each round, how updates land
+    participation: str = "full"   # "full" | "sync-partial" | "async"
+    clients_per_round: int = 0    # K (sync-partial) / buffer M (async);
+                                  # 0 = all active clients
+    staleness_beta: float = 0.5   # async: w_i ∝ m_i (1+τ_i)^(-β)
+    async_concurrency: int = 0    # async: clients in flight; 0 = 2K
+    trace: Any = None             # None|"uniform"|"skewed"|
+                                  # sched.AvailabilityTrace
 
 
 @dataclass
@@ -61,6 +77,11 @@ class History:
     uplink_bytes: List[int] = field(default_factory=list)
     round_time_s: List[float] = field(default_factory=list)
     util_proxy: List[float] = field(default_factory=list)
+    # per committed round: participating client ids, staleness of each
+    # committed update (server versions), and the virtual commit time
+    participation: List[List[int]] = field(default_factory=list)
+    staleness: List[List[int]] = field(default_factory=list)
+    vtime: List[float] = field(default_factory=list)
     meta: Dict = field(default_factory=dict)
 
 
@@ -191,6 +212,12 @@ def run_federated(cfg: FLConfig) -> History:
     # very skewed Dirichlet draws can leave a shard empty; a client with
     # no data cannot train (either engine) and would get weight 0 anyway
     clients = [c for c in clients if c.n > 0]
+    # availability/heterogeneity trace over the *active* population:
+    # selection propensity, virtual speed, and local-step multipliers
+    trace = sched_lib.resolve_trace(cfg.trace, len(clients),
+                                    seed=cfg.seed)
+    for i, c in enumerate(clients):
+        c.step_mult = int(trace.step_mult[i])
     if strat.use_gan:
         for i, c in enumerate(clients):
             if c.n >= 8:
@@ -221,7 +248,6 @@ def run_federated(cfg: FLConfig) -> History:
             (frozen_params * 4 + trainable_params * 12)),
     })
 
-    engine = None
     if cfg.engine == "cohort":
         engine = cohort_lib.CohortEngine(
             frozen=frozen, ccfg=ccfg, class_emb=class_emb,
@@ -229,32 +255,55 @@ def run_federated(cfg: FLConfig) -> History:
             cfg=cohort_lib.CohortConfig(
                 strategy=strat, local_steps=cfg.local_steps,
                 batch_size=cfg.batch_size, lr=cfg.lr))
-    elif cfg.engine != "sequential":
+        executor = sched_lib.CohortExec(engine)
+    elif cfg.engine == "sequential":
+        executor = sched_lib.SequentialExec(
+            clients=clients, frozen=frozen, ccfg=ccfg,
+            class_emb=class_emb, local_steps=cfg.local_steps,
+            batch_size=cfg.batch_size, lr=cfg.lr)
+    else:
         raise ValueError(f"unknown engine {cfg.engine!r}")
 
+    # like the empty-shard drop above, clamp the cohort width to the
+    # clients that actually survived partitioning; meta records the
+    # effective K (sched.k). 'full' ignores K, so it sees the raw value
+    # and a contradictory clients_per_round still fails loudly.
+    k_eff = cfg.clients_per_round
+    if cfg.participation != "full" and k_eff:
+        k_eff = min(k_eff, len(clients))
+    sched = sched_lib.make_scheduler(
+        cfg.participation, executor=executor, trace=trace,
+        local_steps=cfg.local_steps,
+        clients_per_round=k_eff,
+        staleness_beta=cfg.staleness_beta,
+        concurrency=cfg.async_concurrency,
+        client_n=[c.n for c in clients])
+    hist.meta.update({
+        "participation": sched.name,
+        "clients_per_round": sched.k,
+        "trace": trace.name,
+        "staleness_beta": float(cfg.staleness_beta),
+    })
+
+    # compile every fused program the policy dispatches before the clock
+    # starts, so round_time_s is steady-state and the one-time jit cost
+    # is reported separately (satellite of the PR 2 scheduler issue).
+    t0 = time.time()
+    sched.warmup(global_tr, jax.random.fold_in(rng, 4))
+    hist.meta["compile_time_s"] = time.time() - t0
+
+    cids = np.asarray([c.cid for c in clients])
     for rnd in range(cfg.rounds):
         t0 = time.time()
-        if engine is not None:
-            key = jax.random.fold_in(jax.random.fold_in(rng, 3), rnd)
-            global_tr, m = engine.run_round(global_tr, key)
-            closs = [float(v) for v in m["loss"]]
-            cacc = [float(v) for v in m["acc"]]
-            hist.uplink_bytes.append(int(m["uplink_bytes"]))
-        else:
-            updates, closs, cacc = [], [], []
-            for i, c in enumerate(clients):
-                tr_after, m = c.local_train(
-                    frozen, global_tr, class_emb, ccfg,
-                    steps=cfg.local_steps, batch_size=cfg.batch_size,
-                    lr=cfg.lr, seed=cfg.seed * 1000 + rnd * 100 + i)
-                upd, _ = c.make_update(global_tr, tr_after)
-                updates.append((c.n, upd))
-                closs.append(m["loss"])
-                cacc.append(m["acc"])
-            global_tr = server.aggregate(global_tr, updates)
-            hist.uplink_bytes.append(server.secure_sum_bytes(updates))
-        hist.client_loss.append(closs)
-        hist.client_acc.append(cacc)
+        key = jax.random.fold_in(jax.random.fold_in(rng, 3), rnd)
+        global_tr, m = sched.step(global_tr, rnd, key)
+        hist.uplink_bytes.append(int(m["uplink_bytes"]))
+        hist.client_loss.append([float(v) for v in m["loss"]])
+        hist.client_acc.append([float(v) for v in m["acc"]])
+        hist.participation.append(
+            [int(cids[p]) for p in m["participation"]])
+        hist.staleness.append([int(s) for s in m["staleness"]])
+        hist.vtime.append(float(m["vtime"]))
         hist.round_time_s.append(time.time() - t0)
         # measured footprint constant (Fig. 3) — deterministic, no
         # synthetic wiggle

@@ -18,6 +18,13 @@ COMM_BLOCK = 64
 COMM_MIN_SIZE = 256
 COMM_SKIP = ("slot",)
 
+# Client-heterogeneity cap shared by the availability-trace generator
+# (fl.sched.traces) and both round executors: per-client local-step
+# multipliers are clipped to this, bounding the static scan length of the
+# fused cohort program (local_steps * MAX_STEP_MULT) and keeping the
+# sequential oracle's batch-index layout identical to the engine's.
+MAX_STEP_MULT = 4
+
 
 @dataclass(frozen=True)
 class Strategy:

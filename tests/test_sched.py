@@ -1,0 +1,351 @@
+"""Scheduler subsystem (fl.sched): sync-partial parity with the
+sequential oracle, K=N degeneracy to the PR 1 full round, async
+virtual-time determinism, staleness-weight semantics, and uplink-byte
+accounting under partial participation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clip as clip_lib
+from repro.data.synthetic import class_tokens, make_dataset
+from repro.fl import client as client_lib
+from repro.fl import cohort as cohort_lib
+from repro.fl import partition, server
+from repro.fl import sched as sched_lib
+from repro.fl.strategies import MAX_STEP_MULT, STRATEGIES
+
+N_CLIENTS = 3
+STEPS, BATCH, LR = 4, 8, 3e-3
+
+_SETUPS = {}
+
+
+def _setup(arm, step_mult=None):
+    """Small FL instance with both executors over shared clients.
+    Cached per (arm, step_mult): the engine restages pools only when the
+    heterogeneity profile changes."""
+    key = (arm, None if step_mult is None else tuple(step_mult))
+    if key in _SETUPS:
+        return _SETUPS[key]
+    strat = STRATEGIES[arm]
+    ccfg = clip_lib.CLIPConfig()
+    frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+    data = make_dataset("pacs", n_per_class=12, seed=0,
+                        longtail_gamma=4.0)
+    spec = data["spec"]
+    class_emb = clip_lib.text_embedding(
+        frozen, ccfg,
+        jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+    parts = partition.dirichlet_partition(data["labels"], N_CLIENTS, 0.5,
+                                          seed=0)
+    clients = [client_lib.Client(
+        cid=i, images=data["images"][idx], labels=data["labels"][idx],
+        n_classes=spec.n_classes, strategy=strat)
+        for i, idx in enumerate(parts)]
+    if step_mult is not None:
+        for c, m in zip(clients, step_mult):
+            c.step_mult = int(m)
+    if strat.use_gan:
+        for i, c in enumerate(clients):
+            if c.n >= 8:
+                c.prepare_gan(jax.random.PRNGKey(100 + i), steps=25)
+    global_tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg,
+                                          strat)
+    engine = cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(strategy=strat, local_steps=STEPS,
+                                    batch_size=BATCH, lr=LR,
+                                    donate=False))
+    out = dict(
+        strat=strat, ccfg=ccfg, frozen=frozen, class_emb=class_emb,
+        clients=clients, global_tr=global_tr, engine=engine,
+        cohort_exec=sched_lib.CohortExec(engine),
+        seq_exec=sched_lib.SequentialExec(
+            clients=clients, frozen=frozen, ccfg=ccfg,
+            class_emb=class_emb, local_steps=STEPS, batch_size=BATCH,
+            lr=LR))
+    _SETUPS[key] = out
+    return out
+
+
+def _trace(n=N_CLIENTS, step_mult=None, **kw):
+    base = sched_lib.uniform_trace(n)
+    fields = dict(availability=base.availability, speed=base.speed,
+                  step_mult=base.step_mult if step_mult is None
+                  else np.asarray(step_mult, np.int32))
+    fields.update(kw)
+    return sched_lib.AvailabilityTrace(**fields)
+
+
+def _assert_tree_close(a, b, atol, msg=""):
+    flat_b = dict((jax.tree_util.keystr(p), l) for p, l in
+                  jax.tree_util.tree_leaves_with_path(b))
+    for p, leaf in jax.tree_util.tree_leaves_with_path(a):
+        np.testing.assert_allclose(
+            np.asarray(leaf), np.asarray(flat_b[jax.tree_util.keystr(p)]),
+            atol=atol, rtol=0, err_msg=f"{msg}{jax.tree_util.keystr(p)}")
+
+
+@pytest.mark.parametrize("arm", ["fedclip", "tripleplay"])
+def test_sync_partial_matches_sequential_oracle(arm):
+    """A fused subset round (gather into staged pools, in-program
+    aggregation over renormalized subset weights) must reproduce the
+    sequential per-client loop restricted to the selected subset: final
+    trainables, per-client loss/acc, uplink bytes."""
+    s = _setup(arm)
+    trace = _trace()
+    mk = lambda ex: sched_lib.SyncPartialScheduler(
+        executor=ex, trace=trace, local_steps=STEPS, clients_per_round=2)
+    key = jax.random.PRNGKey(7)
+    new_c, mc = mk(s["cohort_exec"]).step(s["global_tr"], 0, key)
+    new_s, ms = mk(s["seq_exec"]).step(s["global_tr"], 0, key)
+    assert list(mc["participation"]) == list(ms["participation"])
+    np.testing.assert_allclose(mc["loss"], ms["loss"], atol=1e-3,
+                               rtol=1e-4)
+    np.testing.assert_allclose(mc["acc"], ms["acc"], atol=1e-5)
+    assert int(mc["uplink_bytes"]) == int(ms["uplink_bytes"])
+    _assert_tree_close(new_c, new_s, atol=5e-4, msg=f"{arm} ")
+
+
+def test_sync_partial_at_K_N_reproduces_full_round_exactly():
+    """The degenerate policy: K=N with a uniform trace selects the
+    identity cohort with the full round's batch key, so the subset
+    program (gather prefix + identical math) is bit-identical to PR 1's
+    ``run_round``. SyncPartial at K=N exercises the gather program;
+    FullSync short-circuits to the gather-free program — all three must
+    agree bitwise."""
+    s = _setup("fedclip")
+    key = jax.random.PRNGKey(11)
+    ref, mref = s["engine"].run_round(s["global_tr"], key)
+    partial = sched_lib.SyncPartialScheduler(
+        executor=s["cohort_exec"], trace=_trace(), local_steps=STEPS,
+        clients_per_round=N_CLIENTS)
+    full = sched_lib.FullSyncScheduler(
+        executor=s["cohort_exec"], trace=_trace(), local_steps=STEPS)
+    for sched in (partial, full):
+        new, m = sched.step(s["global_tr"], 0, key)
+        for (p, a), b in zip(jax.tree_util.tree_leaves_with_path(ref),
+                             jax.tree.leaves(new)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{sched.name} {jax.tree_util.keystr(p)}")
+        np.testing.assert_array_equal(mref["loss"], m["loss"])
+        assert int(mref["uplink_bytes"]) == int(m["uplink_bytes"])
+        assert list(m["participation"]) == list(range(N_CLIENTS))
+
+
+def test_uplink_accounting_under_partial_participation():
+    """Per-round uplink bytes must be exactly K x the per-client
+    quantized payload (leading-axis-inert quantization), matching the
+    sequential path's actual ``make_update`` payload sum."""
+    s = _setup("tripleplay")
+    trace = _trace()
+    per_client = s["engine"].per_client_uplink_bytes(s["global_tr"])
+    for k in (1, 2, 3):
+        sched = sched_lib.SyncPartialScheduler(
+            executor=s["cohort_exec"], trace=trace, local_steps=STEPS,
+            clients_per_round=k)
+        _, m = sched.step(s["global_tr"], 0, jax.random.PRNGKey(k))
+        assert int(m["uplink_bytes"]) == k * per_client
+        assert len(m["participation"]) == k
+
+
+def test_async_virtual_time_is_bit_deterministic():
+    """Two async runs with the same seed/trace must agree bitwise:
+    participation order, staleness tags, virtual commit times, and the
+    final global trainables."""
+    s = _setup("fedclip")
+    trace = sched_lib.skewed_trace(N_CLIENTS, seed=5)
+
+    def run():
+        sched = sched_lib.AsyncBufferedScheduler(
+            executor=s["cohort_exec"], trace=trace, local_steps=STEPS,
+            clients_per_round=1, staleness_beta=0.5, concurrency=2,
+            client_n=[c.n for c in s["clients"]])
+        tr = s["global_tr"]
+        log = []
+        for rnd in range(4):
+            tr, m = sched.step(tr, rnd, jax.random.PRNGKey(rnd))
+            log.append((list(m["participation"]), list(m["staleness"]),
+                        m["vtime"]))
+        return tr, log
+
+    tr1, log1 = run()
+    tr2, log2 = run()
+    assert log1 == log2
+    for a, b in zip(jax.tree.leaves(tr1), jax.tree.leaves(tr2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # staleness actually emerges: concurrency > buffer means some
+    # committed updates trained against an older server version
+    assert any(t > 0 for (_, taus, _) in log1 for t in taus)
+    assert all(t >= 0 for (_, taus, _) in log1 for t in taus)
+
+
+def test_async_rotates_through_idle_population():
+    """Freed slots back-fill from the idle pool, so clients outside the
+    initial concurrency draw rotate into training instead of being
+    excluded for the whole run."""
+    s = _setup("fedclip")
+    trace = sched_lib.skewed_trace(N_CLIENTS, seed=2)
+    sched = sched_lib.AsyncBufferedScheduler(
+        executor=s["cohort_exec"], trace=trace, local_steps=STEPS,
+        clients_per_round=1, staleness_beta=0.5, concurrency=2,
+        client_n=[c.n for c in s["clients"]])
+    tr = s["global_tr"]
+    seen = set()
+    for rnd in range(8):
+        tr, m = sched.step(tr, rnd, jax.random.PRNGKey(rnd))
+        seen.update(int(c) for c in m["participation"])
+    assert seen == set(range(N_CLIENTS))
+
+
+def test_engine_rejects_untraced_heterogeneity():
+    """A scheduler carrying heterogeneous step counts over an engine
+    staged homogeneous must fail loudly, not silently train the wrong
+    number of steps."""
+    s = _setup("fedclip")   # staged with every step_mult == 1
+    sched = sched_lib.FullSyncScheduler(
+        executor=s["cohort_exec"], trace=_trace(step_mult=[2, 1, 1]),
+        local_steps=STEPS)
+    with pytest.raises(ValueError,
+                       match="staged homogeneous|outside \\[1,"):
+        sched.step(s["global_tr"], 0, jax.random.PRNGKey(0))
+
+
+def test_sequential_rejects_untraced_heterogeneity():
+    """The sequential oracle mirrors the engine's loud failure: a step
+    profile exceeding its staged batch-index layout must raise, never
+    silently truncate (executor parity)."""
+    s = _setup("fedclip")   # max_steps staged with every step_mult == 1
+    sched = sched_lib.FullSyncScheduler(
+        executor=s["seq_exec"], trace=_trace(step_mult=[2, 1, 1]),
+        local_steps=STEPS)
+    with pytest.raises(ValueError, match="exceed the staged maximum"):
+        sched.step(s["global_tr"], 0, jax.random.PRNGKey(0))
+
+
+def test_run_round_rejects_heterogeneous_engine():
+    """``run_round`` is the unmasked homogeneous program; on an engine
+    staged with step multipliers it must refuse rather than silently
+    train every client the base step count."""
+    s = _setup("fedclip", step_mult=[2, 1, 1])
+    with pytest.raises(ValueError, match="homogeneous"):
+        s["engine"].run_round(s["global_tr"], jax.random.PRNGKey(0))
+
+
+def test_full_policy_rejects_clients_per_round():
+    with pytest.raises(ValueError, match="meaningless"):
+        sched_lib.make_scheduler(
+            "full", executor=None, trace=_trace(), local_steps=STEPS,
+            clients_per_round=2)
+
+
+def test_staleness_weights_beta0_is_fedavg():
+    m = np.array([10, 30, 60], np.float64)
+    tau = np.array([0, 2, 5], np.float64)
+    w0 = sched_lib.staleness_weights(m, tau, beta=0.0)
+    np.testing.assert_allclose(w0, m / m.sum(), rtol=1e-6)
+    # β>0 discounts stale updates: same mass, higher τ → lower weight
+    w = sched_lib.staleness_weights([1, 1, 1], [0, 1, 3], beta=0.7)
+    assert w[0] > w[1] > w[2]
+    np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-6)
+    with pytest.raises(ValueError):
+        sched_lib.staleness_weights([0.0, 0.0], [0, 0], beta=0.5)
+
+
+def test_async_beta0_commit_equals_fedavg_aggregate():
+    """An async buffer commit at β=0 must equal plain sample-count
+    FedAvg over the same buffered deltas (cohort and sequential commit
+    paths agree with ``server.aggregate``)."""
+    s = _setup("fedclip")
+    cohort = sched_lib.Cohort(sel=np.array([0, 2], np.int32),
+                              n_steps=np.full(2, STEPS, np.int32),
+                              staleness=np.array([3, 1], np.int32))
+    deltas, m = s["cohort_exec"].run_wave(
+        s["global_tr"], cohort, jax.random.PRNGKey(3))
+    masses = [s["clients"][0].n, s["clients"][2].n]
+    w0 = sched_lib.staleness_weights(masses, cohort.staleness, beta=0.0)
+    got = s["cohort_exec"].commit_buffer(s["global_tr"], w0, deltas)
+    ref = server.aggregate(s["global_tr"], list(zip(masses, deltas)))
+    _assert_tree_close(got, ref, atol=1e-6)
+
+
+def test_heterogeneous_local_steps_parity():
+    """Trace-assigned step multipliers: the fused program masks the tail
+    of its fixed-length scan per client; the sequential oracle simply
+    runs fewer steps. Both must agree."""
+    mult = [2, 1, 1]
+    s = _setup("fedclip", step_mult=mult)
+    assert s["engine"].max_steps == STEPS * 2
+    trace = _trace(step_mult=mult)
+    mk = lambda ex: sched_lib.FullSyncScheduler(
+        executor=ex, trace=trace, local_steps=STEPS)
+    key = jax.random.PRNGKey(9)
+    new_c, mc = mk(s["cohort_exec"]).step(s["global_tr"], 0, key)
+    new_s, ms = mk(s["seq_exec"]).step(s["global_tr"], 0, key)
+    np.testing.assert_allclose(mc["loss"], ms["loss"], atol=1e-3,
+                               rtol=1e-4)
+    _assert_tree_close(new_c, new_s, atol=5e-4, msg="het ")
+
+
+def test_traces_deterministic_and_validated():
+    t1 = sched_lib.skewed_trace(8, seed=3)
+    t2 = sched_lib.skewed_trace(8, seed=3)
+    np.testing.assert_array_equal(t1.availability, t2.availability)
+    np.testing.assert_array_equal(t1.speed, t2.speed)
+    assert t1.step_mult.min() >= 1 and \
+        t1.step_mult.max() <= MAX_STEP_MULT
+    np.testing.assert_allclose(t1.selection_probs().sum(), 1.0,
+                               rtol=1e-12)
+    assert sched_lib.resolve_trace(None, 4).name == "uniform"
+    assert sched_lib.resolve_trace("skewed", 4, seed=1).n == 4
+    assert sched_lib.resolve_trace("skewed", 64, seed=1).step_mult.max() \
+        == 1
+    assert sched_lib.resolve_trace("skewed-het", 64,
+                                   seed=1).step_mult.max() > 1
+    with pytest.raises(ValueError):
+        sched_lib.resolve_trace(t1, 4)       # built for 8 clients
+    with pytest.raises(ValueError):
+        sched_lib.AvailabilityTrace(
+            availability=np.ones(2), speed=np.ones(2),
+            step_mult=np.array([1, MAX_STEP_MULT + 1]))
+
+
+def test_aggregation_weight_guards():
+    g = {"w": jnp.zeros((4,))}
+    stacked = {"w": jnp.ones((2, 4))}
+    ok = jnp.asarray([0.25, 0.75])
+    out = server.aggregate_stacked(g, ok, stacked)
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0)
+    with pytest.raises(ValueError):   # not normalized
+        server.aggregate_stacked(g, jnp.asarray([1.0, 1.0]), stacked)
+    with pytest.raises(ValueError):   # wrong shape
+        server.aggregate_stacked(g, jnp.asarray([1.0]), stacked)
+    with pytest.raises(ValueError):   # negative mass
+        server.aggregate(g, [(-1.0, {"w": jnp.ones((4,))}),
+                             (2.0, {"w": jnp.ones((4,))})])
+    with pytest.raises(ValueError):   # zero total
+        server.aggregate(g, [(0.0, {"w": jnp.ones((4,))})])
+
+
+def test_simulator_history_columns_and_compile_split():
+    """run_federated drives every policy through one scheduler path and
+    records participation/staleness/vtime plus the one-time compile cost
+    (round_time_s is steady-state)."""
+    from repro.fl.simulator import FLConfig, run_federated
+    h = run_federated(FLConfig(
+        dataset="pacs", strategy="fedclip", n_clients=4, rounds=2,
+        local_steps=3, n_per_class=12, batch_size=8, lr=3e-3,
+        participation="sync-partial", clients_per_round=2,
+        trace="skewed"))
+    assert h.meta["participation"] == "sync-partial"
+    assert h.meta["clients_per_round"] == 2
+    assert h.meta["compile_time_s"] > 0
+    assert len(h.participation) == 2 and \
+        all(len(p) == 2 for p in h.participation)
+    assert h.staleness == [[0, 0], [0, 0]]
+    assert h.vtime == [1.0, 2.0]
+    assert all(len(l) == 2 for l in h.client_loss)
+    # steady-state rounds exclude the jit cost recorded in meta
+    assert max(h.round_time_s) < h.meta["compile_time_s"]
