@@ -2,19 +2,29 @@
 cohort engine (fl.cohort), across cohort sizes.
 
 Measures steady-state (post-compile) mean round time for
-``n_clients in {2, 8, 32}`` on two arms — fedclip (adapter-only, where
-staging lets the engine hoist the whole frozen backbone out of the
-training loop) and qlora_nogan (adapter + LoRA + int8 uplink
-quantization, where only the patch embedding hoists) — and writes
-``BENCH_fl_round.json`` at the repo root so the perf trajectory is
-tracked from this PR onward. Both paths compute the same local-training
-math (see the cohort-vs-sequential parity tests).
+``n_clients in {2, 8, 32}`` on three arms — fedclip (adapter-only,
+where staging lets the engine hoist the whole frozen backbone out of
+the training loop), qlora_nogan (adapter + LoRA + int8 uplink
+quantization, where only the patch embedding hoists), and tripleplay
+(qlora + client-side GAN rebalancing; capped at 8 clients to keep the
+GAN-prep wall-clock sane) — and writes ``BENCH_fl_round.json`` at the
+repo root so the perf trajectory is tracked from this PR onward. Both
+paths compute the same local-training math (see the
+cohort-vs-sequential parity tests). Tripleplay points record GAN prep
+separately from round time (``gan_prep_time_s`` steady-state,
+``gan_compile_time_s`` one-time — the ``History.meta["compile_time_s"]``
+hygiene).
 
 A second sweep holds the population fixed (N = max(N_CLIENTS)) and
 varies ``clients_per_round``: sync-partial rounds gather K rows of the
 already-staged pools inside the fused program, so round time should
 scale with K while staging cost stays one-time. Results land in the
 same ``BENCH_fl_round.json`` under ``partial_points``.
+
+A third comparison (``gan_points``) times the fleet-GAN engine
+(``fl.fleetgan``: every client's conditional GAN trained/synthesized in
+stacked fused programs) against the sequential per-client
+``prepare_gan`` loop at 8 clients, both steady-state.
 
 REPRO_BENCH_SCALE=quick (default) times 3 rounds per point; =paper 10.
 """
@@ -33,7 +43,9 @@ from repro.core import clip as clip_lib
 from repro.data.synthetic import class_tokens, make_dataset
 from repro.fl import client as client_lib
 from repro.fl import cohort as cohort_lib
+from repro.fl import fleetgan
 from repro.fl import partition, server
+from repro.fl import strategies as strategies_lib
 from repro.fl.strategies import STRATEGIES
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
@@ -42,11 +54,19 @@ CLIENTS_PER_ROUND = (2, 4, 8, 16)   # sync-partial sweep at fixed N
 LOCAL_STEPS = 6
 BATCH = 32
 LR = 3e-3
-ROUNDS = {"quick": 3, "paper": 10}[
-    os.environ.get("REPRO_BENCH_SCALE", "quick")]
+_SCALE = os.environ.get("REPRO_BENCH_SCALE", "quick")
+ROUNDS = {"quick": 3, "paper": 10}[_SCALE]
+GAN_STEPS = {"quick": 20, "paper": 150}[_SCALE]
+GAN_N_CLIENTS = 8                    # fleet-vs-sequential GAN point
 
 
-def _setup(arm: str, n_clients: int):
+def _gan_keys(n: int):
+    return [jax.random.fold_in(jax.random.PRNGKey(7),
+                               strategies_lib.GAN_RNG_OFFSET + i)
+            for i in range(n)]
+
+
+def _setup(arm: str, n_clients: int, *, gan_prep: bool = True):
     strat = STRATEGIES[arm]
     ccfg = clip_lib.CLIPConfig()
     frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
@@ -65,8 +85,15 @@ def _setup(arm: str, n_clients: int):
         cid=i, images=data["images"][idx], labels=data["labels"][idx],
         n_classes=spec.n_classes, strategy=strat)
         for i, idx in enumerate(parts) if len(idx) > 0]
+    gan_rep = None
+    if strat.use_gan and gan_prep:
+        # fleet-GAN rebalancing before staging, so both round paths
+        # train on the same augmented pools; timing is reported
+        # separately from round time
+        gan_rep = fleetgan.prepare_gan_fleet(
+            clients, _gan_keys(len(clients)), steps=GAN_STEPS)
     tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg, strat)
-    return strat, ccfg, frozen, class_emb, clients, tr
+    return strat, ccfg, frozen, class_emb, clients, tr, gan_rep
 
 
 def time_sequential(frozen, tr, class_emb, ccfg, clients) -> float:
@@ -126,14 +153,52 @@ def time_subset(engine, tr, k: int) -> tuple[float, int]:
     return (time.perf_counter() - t0) / ROUNDS, int(m["uplink_bytes"])
 
 
+def time_gan_sequential(n_clients: int) -> float:
+    """Steady-state sequential per-client ``prepare_gan`` loop: a first
+    pass over identically-shaped clients warms every per-step
+    ``train_step`` / ``synthesize`` compile, then a fresh population is
+    timed."""
+    keys = None
+    for attempt in range(2):
+        _, _, _, _, clients, _, _ = _setup("tripleplay", n_clients,
+                                           gan_prep=False)
+        keys = _gan_keys(len(clients))
+        steps = 2 if attempt == 0 else GAN_STEPS   # warmup pass first
+        t0 = time.perf_counter()
+        for i, c in enumerate(clients):
+            if c.n >= strategies_lib.GAN_MIN_POOL:
+                c.prepare_gan(keys[i], steps=steps)
+        dt = time.perf_counter() - t0
+    return dt
+
+
+def time_gan_fleet(n_clients: int) -> fleetgan.FleetGANReport:
+    """Fleet-GAN prep on a fresh identical population; the report splits
+    one-time compile cost from steady-state prep. The executable cache
+    is dropped first so ``fleet_gan_compile_s`` records the true cold
+    cost even though the tripleplay round points above already warmed
+    identical shapes."""
+    fleetgan.clear_cache()
+    _, _, _, _, clients, _, _ = _setup("tripleplay", n_clients,
+                                       gan_prep=False)
+    return fleetgan.prepare_gan_fleet(
+        clients, _gan_keys(len(clients)), steps=GAN_STEPS)
+
+
 def main():
     results = {"config": {"local_steps": LOCAL_STEPS, "batch": BATCH,
                           "rounds_timed": ROUNDS,
+                          "gan_steps": GAN_STEPS,
                           "backend": jax.default_backend()},
                "points": []}
-    for arm in ("fedclip", "qlora_nogan"):
-        for n in N_CLIENTS:
-            strat, ccfg, frozen, class_emb, clients, tr = _setup(arm, n)
+    for arm in ("fedclip", "qlora_nogan", "tripleplay"):
+        # tripleplay pays n_clients GAN trainings per point; 32-client
+        # GAN prep would dominate the bench wall-clock for no extra
+        # signal (the GAN engine has its own sweep below)
+        for n in (N_CLIENTS if arm != "tripleplay" else
+                  tuple(x for x in N_CLIENTS if x <= GAN_N_CLIENTS)):
+            strat, ccfg, frozen, class_emb, clients, tr, gan_rep = \
+                _setup(arm, n)
             seq = time_sequential(frozen, tr, class_emb, ccfg, clients)
             coh = time_cohort(strat, frozen, tr, class_emb, ccfg,
                               clients)
@@ -141,17 +206,40 @@ def main():
                      "n_clients_effective": len(clients),
                      "sequential_round_s": seq, "cohort_round_s": coh,
                      "speedup": seq / coh}
+            if gan_rep is not None:
+                point.update({
+                    "gan_engine": "fleet",
+                    "gan_prep_time_s": gan_rep.prep_time_s,
+                    "gan_compile_time_s": gan_rep.compile_time_s,
+                    "gan_eligible": gan_rep.n_eligible,
+                    "gan_synth": gan_rep.n_synth})
             results["points"].append(point)
             print(f"{arm:12s} n_clients={n:3d} ({len(clients):3d} with "
                   f"data)  sequential={seq*1e3:8.1f} ms  "
                   f"cohort={coh*1e3:7.1f} ms  speedup={seq/coh:5.1f}x")
 
+    # fleet-GAN engine vs the sequential per-client prepare_gan loop
+    seq_gan = time_gan_sequential(GAN_N_CLIENTS)
+    rep = time_gan_fleet(GAN_N_CLIENTS)
+    results["gan_points"] = [{
+        "n_clients": GAN_N_CLIENTS, "gan_steps": GAN_STEPS,
+        "n_eligible": rep.n_eligible,
+        "groups": [list(g) for g in rep.groups],
+        "sequential_gan_prep_s": seq_gan,
+        "fleet_gan_prep_s": rep.prep_time_s,
+        "fleet_gan_compile_s": rep.compile_time_s,
+        "speedup": seq_gan / rep.prep_time_s}]
+    print(f"fleet-GAN    n_clients={GAN_N_CLIENTS:3d} "
+          f"sequential={seq_gan:7.2f} s  fleet={rep.prep_time_s:7.2f} s "
+          f"(+{rep.compile_time_s:.2f} s compile)  "
+          f"speedup={seq_gan/rep.prep_time_s:5.1f}x")
+
     # sync-partial sweep: fixed population, varying cohort width K
     n_fixed = max(N_CLIENTS)
     results["partial_points"] = []
     for arm in ("fedclip", "qlora_nogan"):
-        strat, ccfg, frozen, class_emb, clients, tr = _setup(arm,
-                                                             n_fixed)
+        strat, ccfg, frozen, class_emb, clients, tr, _ = _setup(arm,
+                                                                n_fixed)
         engine = cohort_lib.CohortEngine(
             frozen=frozen, ccfg=ccfg, class_emb=class_emb,
             clients=clients,

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Tier-1 gate: full unit suite, then 2-round smoke runs through the
-# public simulator entry point — full-sync cohort engine, plus the
-# sync-partial and async-buffered scheduler policies (fl.sched).
+# public simulator entry point — full-sync cohort engine with fleet-GAN
+# rebalancing, plus the sync-partial and async-buffered scheduler
+# policies (fl.sched).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,15 +13,26 @@ from repro.fl.simulator import FLConfig, run_federated
 
 h = run_federated(FLConfig(
     dataset="pacs", strategy="tripleplay", n_clients=2, rounds=2,
-    local_steps=3, n_per_class=12, batch_size=8, gan_steps=30,
+    local_steps=3, n_per_class=12, batch_size=8, gan_steps=10,
     lr=3e-3))
 assert h.meta["engine"] == "cohort"
 assert h.meta["participation"] == "full-sync"
 assert h.meta["compile_time_s"] > 0
 assert len(h.client_loss) == 2 and len(h.client_loss[0]) == 2
 assert all(b > 0 for b in h.uplink_bytes)
-print("cohort smoke run OK:", {"server_loss": h.server_loss,
-                               "uplink_bytes": h.uplink_bytes})
+# fleet-GAN smoke: the tripleplay arm must run its rebalancing through
+# the fused cohort-wide engine — fail loudly if the sequential oracle
+# path was silently taken, and require the compile/steady-state timing
+# split to be populated
+assert h.meta["gan_engine"] == "fleet", h.meta.get("gan_engine")
+assert h.meta["gan_eligible"] == 2 and h.meta["gan_groups"]
+assert h.meta["gan_prep_time_s"] > 0
+assert h.meta["gan_compile_time_s"] > 0
+assert len(h.tail_acc) == len(h.rounds)
+print("cohort+fleet-GAN smoke run OK:",
+      {"server_loss": h.server_loss, "uplink_bytes": h.uplink_bytes,
+       "gan_groups": h.meta["gan_groups"],
+       "gan_prep_time_s": round(h.meta["gan_prep_time_s"], 3)})
 
 h = run_federated(FLConfig(
     dataset="pacs", strategy="fedclip", n_clients=4, rounds=2,

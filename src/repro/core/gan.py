@@ -7,17 +7,38 @@ data never leaves the client (DESIGN.md §7).
 
 min_G max_D V(D,G) = E_x[log D(x)] + E_z[log(1 - D(G(z)))], with the
 non-saturating generator objective.
+
+Two execution granularities share the same step math:
+
+- ``train_gan`` — the original per-step dispatch loop (one jitted
+  ``train_step`` per batch). Kept verbatim as the parity oracle and the
+  benchmark baseline for the fused path.
+- ``gan_scan`` — the whole optimisation as one ``lax.scan`` (mirroring
+  ``optim.adam_scan``): pre-drawn batch indices and per-step RNG keys
+  stream in as scan inputs, and an optional ``active`` mask turns
+  individual steps into bitwise no-ops on params + both Adam states —
+  how the fleet engine (``fl.fleetgan``) carries ineligible clients
+  inside a stacked cohort program. ``gan_key_stream`` /
+  ``gan_batch_indices`` reproduce the exact ``train_gan`` RNG stream so
+  both granularities consume identical keys and batches.
+
+``GANConfig.conv_impl`` selects the convolution lowering: ``"lax"`` (the
+original ``lax.conv``/``conv_transpose`` primitives) or ``"gemm"``
+(``kernels.gan_conv`` im2col / sub-pixel gemm forms — the only lowering
+that stays fast under a ``vmap`` over per-client weights; see that
+module's docstring).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core import optim
+from repro.kernels import gan_conv
 
 
 @dataclass(frozen=True)
@@ -29,6 +50,7 @@ class GANConfig:
     g_dim: int = 32
     d_dim: int = 32
     lr: float = 2e-4
+    conv_impl: str = "lax"       # "lax" | "gemm" (kernels.gan_conv)
 
 
 def init_gan(rng, cfg: GANConfig):
@@ -56,12 +78,16 @@ def init_gan(rng, cfg: GANConfig):
     return {"gen": gen, "disc": disc}
 
 
-def _convT(x, w, stride=2):
+def _convT(x, w, stride=2, impl="lax"):
+    if impl == "gemm":
+        return gan_conv.convT4x4_s2(x, w)
     return lax.conv_transpose(x, w, (stride, stride), "SAME",
                               dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
-def _conv(x, w, stride=2):
+def _conv(x, w, stride=2, impl="lax"):
+    if impl == "gemm":
+        return gan_conv.conv4x4_s2(x, w)
     return lax.conv_general_dilated(
         x, w, (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -72,16 +98,17 @@ def generate(gen, cfg: GANConfig, z, labels):
     y = gen["emb"][labels]
     h = jnp.concatenate([z, y], -1) @ gen["fc"]
     h = jax.nn.relu(h).reshape(-1, 4, 4, 2 * cfg.g_dim)
-    h = jax.nn.relu(_convT(h, gen["c1"]))
-    h = jax.nn.relu(_convT(h, gen["c2"]))
-    return jnp.tanh(_convT(h, gen["c3"]))
+    h = jax.nn.relu(_convT(h, gen["c1"], impl=cfg.conv_impl))
+    h = jax.nn.relu(_convT(h, gen["c2"], impl=cfg.conv_impl))
+    return jnp.tanh(_convT(h, gen["c3"], impl=cfg.conv_impl))
 
 
 def discriminate(disc, cfg: GANConfig, images, labels, *,
                  with_features: bool = False):
-    h = jax.nn.leaky_relu(_conv(images, disc["c1"]), 0.2)
-    h = jax.nn.leaky_relu(_conv(h, disc["c2"]), 0.2)
-    h = jax.nn.leaky_relu(_conv(h, disc["c3"]), 0.2)
+    impl = cfg.conv_impl
+    h = jax.nn.leaky_relu(_conv(images, disc["c1"], impl=impl), 0.2)
+    h = jax.nn.leaky_relu(_conv(h, disc["c2"], impl=impl), 0.2)
+    h = jax.nn.leaky_relu(_conv(h, disc["c3"], impl=impl), 0.2)
     feat = h.reshape(h.shape[0], -1)
     logit = (feat @ disc["fc"])[:, 0]
     proj = jnp.sum(feat * disc["emb"][labels], -1)   # projection cGAN
@@ -95,9 +122,10 @@ def _bce(logits, target):
                     jnp.log1p(jnp.exp(-jnp.abs(logits))))
 
 
-@partial(jax.jit, static_argnums=(3,))
-def train_step(params, opt_states, batch, cfg: GANConfig, rng):
-    """One alternating D/G update. batch = (images, labels)."""
+def train_step_impl(params, opt_states, batch, cfg: GANConfig, rng):
+    """One alternating D/G update. batch = (images, labels). Pure — the
+    shared body of the per-step ``train_step`` dispatch and the fused
+    ``gan_scan`` loop."""
     images, labels = batch
     B = images.shape[0]
     kz, kz2 = jax.random.split(rng)
@@ -133,6 +161,83 @@ def train_step(params, opt_states, batch, cfg: GANConfig, rng):
     return ({"gen": gen, "disc": disc},
             {"gen": g_opt, "disc": d_opt},
             {"d_loss": dl, "g_loss": gl})
+
+
+train_step = jax.jit(train_step_impl, static_argnums=(3,))
+
+
+def gan_key_stream(rng, steps: int):
+    """The exact RNG stream ``train_gan`` consumes, as arrays: returns
+    ``(init_key, batch_keys (steps, 2), step_keys (steps, 2))`` such
+    that ``train_gan(rng, ...)`` is ``init_gan(init_key)`` followed by
+    one ``train_step(..., step_keys[t])`` on the ``batch_keys[t]`` draw
+    per step. Bitwise (threefry is deterministic), and vmappable over a
+    stacked cohort of per-client rngs."""
+    k0, r = jax.random.split(rng)
+
+    def body(r, _):
+        r, kb, ks = jax.random.split(r, 3)
+        return r, (kb, ks)
+
+    _, (kbs, kss) = lax.scan(body, r, None, length=steps)
+    return k0, kbs, kss
+
+
+def gan_batch_indices(batch_keys, n, batch: int):
+    """Per-step pool indices ``(steps, batch)`` in ``[0, n)`` — bitwise
+    the draws of the sequential ``train_gan`` loop. ``n`` may be traced
+    (vmapped over clients sharing one compile): rows past ``n`` of a
+    padded pool carry zero sampling probability by construction."""
+    return jax.vmap(
+        lambda k: jax.random.randint(k, (batch,), 0, n))(batch_keys)
+
+
+def gan_scan(params, opt_states, cfg: GANConfig, images, labels, idx,
+             step_keys, *, active=None):
+    """Fused GAN training: one ``lax.scan`` of ``train_step_impl`` over
+    pre-drawn batch indices ``idx (steps, batch)`` and per-step RNG keys
+    ``step_keys (steps, 2)`` — the scan-friendly form of ``train_gan``
+    (mirroring ``optim.adam_scan``), jit/donation-friendly and vmappable
+    over a stacked cohort axis.
+
+    ``active`` — optional per-step bool vector. Steps with
+    ``active[t] == False`` leave params and both Adam states (moments
+    *and* step counters) bitwise untouched; the fleet engine uses an
+    all-False mask to carry clients below the GAN eligibility threshold
+    inside a fixed-shape cohort program. Metrics are still emitted for
+    masked steps (evaluated on the frozen params).
+    """
+    masked = active is not None
+
+    def body(carry, x):
+        p, o = carry
+        if masked:
+            ix, k, live = x
+        else:
+            ix, k = x
+        p2, o2, m = train_step_impl(p, o, (images[ix], labels[ix]), cfg,
+                                    k)
+        if masked:
+            p2 = jax.tree.map(lambda a, b: jnp.where(live, a, b), p2, p)
+            o2 = jax.tree.map(lambda a, b: jnp.where(live, a, b), o2, o)
+        return (p2, o2), m
+
+    xs = (idx, step_keys, active) if masked else (idx, step_keys)
+    (params, opt_states), ms = lax.scan(body, (params, opt_states), xs)
+    return params, opt_states, ms
+
+
+def rebalance_labels(labels, n_classes: int) -> np.ndarray:
+    """Labels of the synthetic samples that top every class up to the
+    local max count (paper §III-B) — the host-side ``need`` computation
+    shared by ``Client.prepare_gan`` and the fleet engine."""
+    hist = np.bincount(np.asarray(labels), minlength=n_classes)
+    target = hist.max() if len(hist) else 0
+    if not target:
+        return np.array([], np.int32)
+    return np.concatenate([
+        np.full(max(0, int(target - hist[c])), c, np.int32)
+        for c in range(n_classes)])
 
 
 def train_gan(rng, cfg: GANConfig, images, labels, *, steps: int = 200,

@@ -24,6 +24,7 @@ from repro.core import gan as gan_lib
 from repro.core import losses, optim
 from repro.core.quant import (QTensor, dequantize_tree, quantize,
                               quantize_tree, tree_bytes)
+from repro.fl import strategies as strategies_lib
 from repro.fl.strategies import Strategy
 
 LORA_RANK = 4
@@ -112,17 +113,22 @@ class Client:
 
     def prepare_gan(self, rng, *, steps: int = 150):
         """Train the local conditional GAN and synthesize a rebalancing
-        set so every class reaches the local max count (paper §III-B)."""
+        set so every class reaches the local max count (paper §III-B).
+
+        This is the sequential per-client path — one jitted
+        ``gan.train_step`` dispatch per GAN step — kept as the parity
+        oracle and benchmark baseline for the fused fleet engine
+        (``fl.fleetgan.prepare_gan_fleet``), which trains every
+        client's GAN inside one stacked cohort program on the same
+        per-client RNG streams. Thresholds and batch sizing are the
+        shared ``fl.strategies`` constants so both paths agree on
+        eligibility and shapes."""
         self.gan_cfg = gan_lib.GANConfig(n_classes=self.n_classes)
         self.gan_params, _ = gan_lib.train_gan(
             rng, self.gan_cfg, jnp.asarray(self.images),
             jnp.asarray(self.labels), steps=steps,
-            batch=min(64, max(8, self.n)))
-        hist = np.bincount(self.labels, minlength=self.n_classes)
-        target = hist.max()
-        need = np.concatenate([
-            np.full(max(0, int(target - hist[c])), c, np.int32)
-            for c in range(self.n_classes)]) if target else np.array([], np.int32)
+            batch=strategies_lib.gan_batch_size(self.n))
+        need = gan_lib.rebalance_labels(self.labels, self.n_classes)
         if len(need) == 0:
             self.aug_images = np.zeros((0, *self.images.shape[1:]),
                                        np.float32)

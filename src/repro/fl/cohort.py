@@ -82,6 +82,30 @@ class CohortConfig:
     donate: bool = True       # donate the global-trainable buffers
 
 
+def stage_encoded_pools(frozen, ccfg, *, use_lora: bool, imgs, put=None,
+                        chunk: int = 512):
+    """Encode padded client pools ``(C, P, H, W, ch)`` through the
+    trainable-independent prefix of the forward — the whole frozen
+    backbone (pooled features) for adapter-only arms, the patch
+    embedding (tokens) for LoRA arms — in fixed-size chunks, one jitted
+    program reused across chunks.
+
+    This is the single staging pipeline for every pool that enters the
+    cohort engine: raw client data and the fleet-GAN rebalancing sets
+    (``fl.fleetgan``) flow through it identically, so GAN-augmented
+    pools cost one staging pass like any other pool."""
+    put = jnp.asarray if put is None else put
+    C, P = imgs.shape[:2]
+    flat = jnp.asarray(imgs.reshape(C * P, *imgs.shape[2:]))
+    stage = jax.jit(
+        (lambda x: clip_lib.embed_patches(frozen, ccfg, x))
+        if use_lora else
+        (lambda x: clip_lib.encode_image(frozen, ccfg, x)))
+    staged = jnp.concatenate(
+        [stage(flat[i:i + chunk]) for i in range(0, C * P, chunk)])
+    return put(staged.reshape(C, P, *staged.shape[1:]))
+
+
 def sample_batch_indices(key, lens, steps: int, batch: int):
     """(n_clients, steps, batch) pool indices, client i's in
     [0, lens[i]). The engine draws these in a dedicated small dispatch on
@@ -200,16 +224,11 @@ class CohortEngine:
         #  - with LoRA: the patch embedding (+cls+pos), which LoRA never
         #    touches; the pool is stored as embedded tokens
         #    (C, P, S, d).
-        C, P = labs.shape
-        flat_imgs = jnp.asarray(imgs.reshape(C * P, *imgs.shape[2:]))
-        stage = jax.jit(
-            (lambda x: clip_lib.embed_patches(frozen, ccfg, x))
-            if cfg.strategy.use_lora else
-            (lambda x: clip_lib.encode_image(frozen, ccfg, x)))
-        staged = jnp.concatenate(
-            [stage(flat_imgs[i:i + 512])
-             for i in range(0, C * P, 512)])
-        self.pool_staged = put(staged.reshape(C, P, *staged.shape[1:]))
+        # GAN-rebalanced pools (fl.fleetgan) arrive here already
+        # augmented via Client.pool() and stage like any other pool.
+        self.pool_staged = stage_encoded_pools(
+            frozen, ccfg, use_lora=cfg.strategy.use_lora, imgs=imgs,
+            put=put)
         self.pool_labs = put(labs)
         self.lens = jnp.asarray(lens, jnp.int32)
         self.weights = jnp.asarray(weights, jnp.float32)

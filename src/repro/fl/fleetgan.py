@@ -1,0 +1,250 @@
+"""Fleet-GAN engine: cohort-wide long-tail rebalancing as fused programs.
+
+The paper's third "play" — client-side conditional-GAN over-sampling of
+tail classes (§III-B) — ran as the pre-cohort-engine pattern: a Python
+loop over clients, each client a Python loop of per-step ``train_step``
+dispatches, so tripleplay setup cost ``n_clients x gan_steps`` device
+round-trips while local training ran as one fused program. This module
+trains every client's GAN through ``gan.gan_scan`` (one ``lax.scan``
+over GAN steps, donated params + Adam states) under a ``jax.vmap`` over
+a stacked cohort axis, then synthesizes every client's rebalancing set
+in one more stacked dispatch.
+
+Layout and masking:
+
+- Per-client pools are padded to one fixed shape per group
+  (``stage_client_pools``); batch indices are drawn in ``[0, n_i)``
+  (``gan.gan_batch_indices``) so padded rows carry zero sampling
+  probability — the same masked-sampling discipline as ``fl.cohort``.
+- Clients below ``strategies.GAN_MIN_POOL`` ride inside the stacked
+  program with an all-False ``active`` mask: every one of their steps is
+  a bitwise no-op on params + both Adam states (the het-local-steps
+  masking of the scheduler PRs), and no GAN fields are written back.
+- The GAN minibatch is ``strategies.gan_batch_size(n)`` — ``min(64,
+  n)``-ish, *data-dependent*. A batch cannot be padded without changing
+  the per-step math (losses are means over the batch), so clients are
+  grouped by batch size and each group is one fused compile. Real
+  (non-degenerate) partitions have few distinct sizes; the common
+  all-``n >= 64`` case is a single compile.
+
+RNG compatibility: client ``i`` consumes exactly the
+``fold_in(rng, strategies.GAN_RNG_OFFSET + i)`` stream of the
+sequential ``Client.prepare_gan`` path (``gan.gan_key_stream``), so the
+sequential loop stays alive as the parity oracle: init params, batch
+indices, and synthesis z-draws match it bitwise; trained params match
+up to gemm-kernel re-association (``kernels.gan_conv`` — XLA fusion is
+not bitwise-stable across loop->scan/vmap restructuring even on
+identical primitives, same caveat as ``test_adam_scan_matches_loop``).
+
+Compile cost is measured separately from steady-state execution
+(AOT ``lower().compile()`` timing, cached across calls), mirroring the
+``History.meta["compile_time_s"]`` hygiene of the round scheduler.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gan as gan_lib
+from repro.core import optim
+from repro.data.synthetic import stage_client_pools
+from repro.fl import strategies as strategies_lib
+
+_EXEC_CACHE: Dict = {}
+
+
+def clear_cache():
+    """Drop the compiled-executable cache. The cache is keyed by program
+    kind + argument geometry and never evicts, so long-lived processes
+    sweeping many distinct population shapes (benchmarks, shape sweeps)
+    can use this to bound memory — and to force a cold
+    ``compile_time_s`` measurement."""
+    _EXEC_CACHE.clear()
+
+
+@dataclass
+class FleetGANReport:
+    """What one fleet prep did: population split, fused-program groups
+    (batch size -> cohort width), and the compile/steady-state timing
+    split."""
+    n_clients: int
+    n_eligible: int
+    n_synth: int = 0
+    groups: List[Tuple[int, int]] = field(default_factory=list)
+    compile_time_s: float = 0.0
+    prep_time_s: float = 0.0
+    d_loss: Dict[int, float] = field(default_factory=dict)
+    g_loss: Dict[int, float] = field(default_factory=dict)
+
+
+def _compiled(kind, build, args, record):
+    """AOT-compile ``build()`` for ``args``' shapes (cached), charging
+    wall-clock to ``record.compile_time_s`` only on a cache miss."""
+    key = (kind,) + tuple(
+        (tuple(l.shape), str(l.dtype)) for l in jax.tree.leaves(args))
+    if key not in _EXEC_CACHE:
+        t0 = time.perf_counter()
+        _EXEC_CACHE[key] = build().lower(*args).compile()
+        record.compile_time_s += time.perf_counter() - t0
+    return _EXEC_CACHE[key]
+
+
+def _keystream_fn(steps):
+    return jax.jit(jax.vmap(lambda r: gan_lib.gan_key_stream(r, steps)))
+
+
+def _indices_fn(batch):
+    return jax.jit(jax.vmap(
+        lambda kb, n: gan_lib.gan_batch_indices(kb, n, batch)))
+
+
+def _init_fn(cfg):
+    def one(k0):
+        params = gan_lib.init_gan(k0, cfg)
+        opt = {"gen": optim.adam_init(params["gen"]),
+               "disc": optim.adam_init(params["disc"])}
+        return params, opt
+    return jax.jit(jax.vmap(one))
+
+
+def _train_fn(cfg):
+    def one(params, opt, imgs, labs, idx, kss, active):
+        return gan_lib.gan_scan(params, opt, cfg, imgs, labs, idx, kss,
+                                active=active)
+    return jax.jit(jax.vmap(one), donate_argnums=(0, 1))
+
+
+def _synth_fn(cfg):
+    return jax.jit(jax.vmap(
+        lambda gen, z, labs: gan_lib.generate(gen, cfg, z, labs)))
+
+
+def prepare_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
+                      conv_impl: str = "gemm") -> FleetGANReport:
+    """Train + synthesize every eligible client's GAN as stacked fused
+    programs and write ``gan_cfg``/``gan_params``/``aug_images``/
+    ``aug_labels`` back onto the clients — the fleet equivalent of
+
+        for i, c in enumerate(clients):
+            if c.n >= strategies.GAN_MIN_POOL:
+                c.prepare_gan(keys[i], steps=steps)
+
+    ``keys[i]`` is client i's GAN key (the simulator passes
+    ``fold_in(rng, GAN_RNG_OFFSET + i)``). Ineligible clients ride the
+    smallest-batch group fully masked (bitwise no-op steps) and keep
+    their GAN fields unset. Returns a :class:`FleetGANReport`.
+    """
+    t_total = time.perf_counter()
+    rep = FleetGANReport(n_clients=len(clients), n_eligible=0)
+    if not clients:
+        return rep
+    if len(keys) != len(clients):
+        # jnp indexing clamps out-of-bounds rows, so a short keys list
+        # would silently reuse the last key — break parity loudly
+        raise ValueError(
+            f"need one GAN key per client (ineligible ones included): "
+            f"got {len(keys)} keys for {len(clients)} clients")
+    n_classes = clients[0].n_classes
+    if any(c.n_classes != n_classes for c in clients):
+        raise ValueError("fleet-GAN cohort must share one class space")
+    if any(c.n == 0 for c in clients):
+        raise ValueError("fleet-GAN cohort contains empty clients — "
+                         "drop them before GAN prep (simulator does)")
+    cfg = gan_lib.GANConfig(n_classes=n_classes, conv_impl=conv_impl)
+    eligible = [c.n >= strategies_lib.GAN_MIN_POOL for c in clients]
+    rep.n_eligible = int(sum(eligible))
+    if rep.n_eligible == 0:       # empty-after-filter: nothing to train
+        rep.prep_time_s = time.perf_counter() - t_total
+        return rep
+
+    # one dispatch: every client's full RNG stream (bitwise the
+    # sequential split sequence)
+    keys_arr = jnp.stack([jnp.asarray(k) for k in keys])
+    ks_exec = _compiled(("keys", steps), lambda: _keystream_fn(steps),
+                        (keys_arr,), rep)
+    k0s, kbs, kss = ks_exec(keys_arr)
+
+    # group by GAN batch size (the one unpaddable shape); ineligible
+    # clients ride the smallest group, fully masked
+    groups: Dict[int, List[int]] = {}
+    for i, c in enumerate(clients):
+        if eligible[i]:
+            groups.setdefault(
+                strategies_lib.gan_batch_size(c.n), []).append(i)
+    small = min(groups)
+    for i, c in enumerate(clients):
+        if not eligible[i]:
+            groups[small].append(i)
+
+    stacked_gen: Dict[int, dict] = {}   # client pos -> generator params
+    for batch in sorted(groups):
+        pos = groups[batch]
+        pos_dev = jnp.asarray(pos)
+        pool_i, pool_l, lens = stage_client_pools(
+            [(clients[i].images, clients[i].labels) for i in pos])
+        iargs = (kbs[pos_dev], jnp.asarray(lens))
+        idx_exec = _compiled(("idx", batch),
+                             lambda: _indices_fn(batch), iargs, rep)
+        idx = idx_exec(*iargs)
+        k0s_g = k0s[pos_dev]
+        init_exec = _compiled(("init", cfg), lambda: _init_fn(cfg),
+                              (k0s_g,), rep)
+        params, opt = init_exec(k0s_g)
+        active = jnp.asarray(
+            np.repeat([[eligible[i]] for i in pos], steps, axis=1))
+        targs = (params, opt, jnp.asarray(pool_i), jnp.asarray(pool_l),
+                 idx, kss[pos_dev], active)
+        train_exec = _compiled(("train", cfg), lambda: _train_fn(cfg),
+                               targs, rep)
+        params, opt, ms = train_exec(*targs)
+        rep.groups.append((batch, len(pos)))
+        d_l, g_l = np.asarray(ms["d_loss"]), np.asarray(ms["g_loss"])
+        for j, i in enumerate(pos):
+            if eligible[i]:
+                stacked_gen[i] = jax.tree.map(lambda l: l[j], params)
+                rep.d_loss[i] = float(d_l[j, -1])
+                rep.g_loss[i] = float(g_l[j, -1])
+
+    # synthesis: per-client z drawn eagerly at the exact sequential
+    # shape (threefry draws are not prefix-stable under padding), then
+    # one stacked generate over the cohort
+    synth = []                     # (pos, need, z)
+    for i, c in enumerate(clients):
+        if not eligible[i]:
+            continue
+        c.gan_cfg = cfg
+        c.gan_params = stacked_gen[i]
+        need = gan_lib.rebalance_labels(c.labels, n_classes)
+        if len(need) == 0:
+            c.aug_images = np.zeros((0, *c.images.shape[1:]), np.float32)
+            c.aug_labels = np.zeros((0,), np.int32)
+            continue
+        z = jax.random.normal(jax.random.fold_in(keys_arr[i], 1),
+                              (len(need), cfg.z_dim))
+        synth.append((i, need, z))
+    if synth:
+        M = max(len(need) for _, need, _ in synth)
+        z_pad = jnp.stack([
+            jnp.pad(z, ((0, M - z.shape[0]), (0, 0)))
+            for _, _, z in synth])
+        lab_pad = jnp.asarray(np.stack([
+            np.pad(need, (0, M - len(need))) for _, need, _ in synth]))
+        gens = jax.tree.map(
+            lambda *ls: jnp.stack(ls),
+            *[stacked_gen[i]["gen"] for i, _, _ in synth])
+        sargs = (gens, z_pad, lab_pad)
+        synth_exec = _compiled(("synth", cfg), lambda: _synth_fn(cfg),
+                               sargs, rep)
+        imgs = np.asarray(synth_exec(*sargs), np.float32)
+        for row, (i, need, _) in enumerate(synth):
+            clients[i].aug_images = imgs[row, :len(need)]
+            clients[i].aug_labels = need
+            rep.n_synth += len(need)
+    rep.prep_time_s = (time.perf_counter() - t_total
+                       ) - rep.compile_time_s
+    return rep

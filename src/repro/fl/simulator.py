@@ -11,6 +11,11 @@ Round execution defaults to the batched cohort engine (``fl.cohort``):
 one jitted, buffer-donated device call per round. ``engine="sequential"``
 keeps the original per-client Python loop as the reference oracle — both
 executors are driven by the same jax.random batch-index sequence.
+GAN-arm rebalancing likewise defaults to the fleet engine
+(``fl.fleetgan``: every client's conditional GAN trained and sampled in
+stacked fused programs); ``gan_engine="sequential"`` keeps the
+per-client ``prepare_gan`` loop as its parity oracle, on identical
+per-client RNG streams.
 
 Participation is a scheduler policy (``fl.sched``): ``participation``
 selects full-sync (every client, the degenerate policy), sync-partial
@@ -35,8 +40,10 @@ from repro.core.quant import quantize_tree, tree_bytes
 from repro.data.synthetic import class_tokens, make_dataset, make_eval_set
 from repro.fl import client as client_lib
 from repro.fl import cohort as cohort_lib
+from repro.fl import fleetgan
 from repro.fl import partition, server
 from repro.fl import sched as sched_lib
+from repro.fl import strategies as strategies_lib
 from repro.fl.strategies import STRATEGIES, Strategy
 
 
@@ -56,6 +63,10 @@ class FLConfig:
     seed: int = 0
     eval_every: int = 1
     engine: str = "cohort"        # "cohort" | "sequential"
+    # GAN-arm rebalancing executor: "fleet" trains every client's GAN in
+    # stacked fused programs (fl.fleetgan); "sequential" is the
+    # per-client prepare_gan loop kept as the parity oracle
+    gan_engine: str = "fleet"
     # scheduler (fl.sched): who trains each round, how updates land
     participation: str = "full"   # "full" | "sync-partial" | "async"
     clients_per_round: int = 0    # K (sync-partial) / buffer M (async);
@@ -218,11 +229,36 @@ def run_federated(cfg: FLConfig) -> History:
                                     seed=cfg.seed)
     for i, c in enumerate(clients):
         c.step_mult = int(trace.step_mult[i])
+    gan_meta: Dict[str, Any] = {}
     if strat.use_gan:
-        for i, c in enumerate(clients):
-            if c.n >= 8:
-                c.prepare_gan(jax.random.fold_in(rng, 100 + i),
-                              steps=cfg.gan_steps)
+        # both executors consume identical per-client RNG streams, so
+        # the sequential loop is the fleet engine's parity oracle
+        gan_keys = [jax.random.fold_in(
+            rng, strategies_lib.GAN_RNG_OFFSET + i)
+            for i in range(len(clients))]
+        t0 = time.time()
+        if cfg.gan_engine == "fleet":
+            rep = fleetgan.prepare_gan_fleet(clients, gan_keys,
+                                             steps=cfg.gan_steps)
+            gan_meta = {
+                "gan_engine": "fleet",
+                "gan_eligible": rep.n_eligible,
+                "gan_synth": rep.n_synth,
+                "gan_groups": [list(g) for g in rep.groups],
+                "gan_prep_time_s": rep.prep_time_s,
+                "gan_compile_time_s": rep.compile_time_s,
+            }
+        elif cfg.gan_engine == "sequential":
+            n_el = 0
+            for i, c in enumerate(clients):
+                if c.n >= strategies_lib.GAN_MIN_POOL:
+                    c.prepare_gan(gan_keys[i], steps=cfg.gan_steps)
+                    n_el += 1
+            gan_meta = {"gan_engine": "sequential",
+                        "gan_eligible": n_el,
+                        "gan_prep_time_s": time.time() - t0}
+        else:
+            raise ValueError(f"unknown gan_engine {cfg.gan_engine!r}")
 
     global_tr = client_lib.init_trainable(
         jax.random.fold_in(rng, 2), ccfg, strat)
@@ -246,6 +282,9 @@ def run_federated(cfg: FLConfig) -> History:
         "util_proxy_const": float(
             (backbone_bytes + trainable_params * 12) /
             (frozen_params * 4 + trainable_params * 12)),
+        # GAN-prep accounting only for use_gan arms — strategy-flag
+        # plumbing keeps these unset everywhere else
+        **gan_meta,
     })
 
     if cfg.engine == "cohort":

@@ -25,6 +25,25 @@ COMM_SKIP = ("slot",)
 # sequential oracle's batch-index layout identical to the engine's.
 MAX_STEP_MULT = 4
 
+# GAN rebalancing thresholds shared by the sequential
+# ``Client.prepare_gan`` loop and the fleet engine (``fl.fleetgan``) —
+# the parity tests depend on both paths agreeing on who trains a GAN,
+# on what batch size, and under which RNG stream.
+GAN_MIN_POOL = 8          # clients with n < this skip GAN rebalancing
+GAN_BATCH_MAX = 64        # GAN minibatch cap
+GAN_RNG_OFFSET = 100      # client i's GAN key = fold_in(rng, OFFSET + i)
+
+
+def gan_batch_size(n: int) -> int:
+    """The GAN minibatch a client with ``n`` local samples trains on:
+    ``prepare_gan``'s historical ``min(GAN_BATCH_MAX, max(GAN_MIN_POOL,
+    n))`` composed with the ``min(batch, n)`` clamp inside
+    ``gan.train_gan`` reduces to ``min(GAN_BATCH_MAX, n)``. The fleet
+    engine groups clients by this value: it is the one shape the fused
+    cohort program cannot pad without changing the math (losses are
+    means over the batch)."""
+    return min(GAN_BATCH_MAX, int(n))
+
 
 @dataclass(frozen=True)
 class Strategy:

@@ -1,0 +1,234 @@
+"""Gemm-based 4x4 / stride-2 conv kernels for the fleet-GAN engine.
+
+XLA CPU lowers ``lax.conv_transpose`` through input dilation — three
+quarters of the inner-product terms multiply inserted zeros, and the
+data-gradient of a strided conv pays the same dilation tax — and lowers
+a ``jax.vmap`` over per-client kernels to ``batch_group_count`` grouped
+convolutions, which fall off the fast Eigen path entirely (measured ~4x
+*slower* than the per-client loop on the 2-core container). Both facts
+make the stacked cohort-axis GAN program (``fl.fleetgan``) unviable on
+the conv primitives.
+
+These kernels express the exact same linear maps as dense gemms over
+phase-decomposed (sub-pixel) layouts:
+
+- ``conv4x4_s2``: the input is split into its four stride-2 phases by a
+  reshape, the 16 kernel taps become 16 cheaply shifted phase views
+  concatenated on channels (im2col without strided slicing), and the
+  conv is one ``(b*oh*ow, 16*ci) @ (16*ci, co)`` matmul. Elementwise
+  identical sums to ``lax.conv_general_dilated`` (empirically bitwise
+  on CPU), with a transpose that is pads/slices + one gemm — no
+  dilation.
+- ``convT4x4_s2``: lax semantics are ``out[2i+2-a, 2j+2-c] +=
+  x[i,j] . w[a,c]``. For wide outputs, the four output phases are one
+  fused gemm (phase kernels concatenated on the output axis) over four
+  shifted input copies, interleaved by reshape. For narrow outputs
+  (``co < 8``, e.g. the to-RGB layer, where the phase gemm degenerates
+  to skinny-N / tiny-K matmuls) the contribution tensor
+  ``x @ w (ci, 16co)`` is computed in one gemm and overlap-added into
+  phases instead. Only the useful quarter of the FLOPs is computed.
+
+Both are plain ``jnp`` programs, so autodiff yields gemm-based
+transposes (the backward pass is where the conv primitives hurt most),
+and a ``jax.vmap`` over a leading cohort axis of per-client kernels
+lowers to batched gemms instead of grouped convolutions.
+
+Shapes are NHWC with even spatial dims, kernels are HWIO ``(4, 4, ci,
+co)``, stride 2, SAME padding — the only geometry the DCGAN in
+``core.gan`` uses (32 -> 16 -> 8 -> 4 and back).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _phase_split(x):
+    """(b, h, w, c) -> (b, 2, 2, h//2, w//2, c) stride-2 phase grid."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).transpose(0, 2, 4, 1,
+                                                           3, 5)
+
+
+# For output position i, a SAME-padded 4x4/stride-2 window covers input
+# rows 2i-1 .. 2i+2: tap a lives in phase (a+1) % 2 at offset
+# -1 / 0 / 0 / +1 — precomputed as tap index -> (phase, shift).
+_TAP = {0: (1, -1), 1: (0, 0), 2: (1, 0), 3: (0, 1)}
+
+
+def _im2col(x):
+    """(b, h, w, ci) -> (b, h//2, w//2, 16*ci) patch matrix of the
+    SAME-padded 4x4/stride-2 windows, tap-major (a, c, ci) to match
+    ``w.reshape(16*ci, co)``."""
+    b, h, ww, ci = x.shape
+    oh, ow = h // 2, ww // 2
+    ph = jnp.pad(_phase_split(x), ((0, 0), (0, 0), (0, 0), (1, 1),
+                                   (1, 1), (0, 0)))
+    taps = []
+    for a in range(4):
+        p, da = _TAP[a]
+        for c in range(4):
+            q, dc = _TAP[c]
+            taps.append(lax.slice(
+                ph, (0, p, q, 1 + da, 1 + dc, 0),
+                (b, p + 1, q + 1, 1 + da + oh, 1 + dc + ow, ci)))
+    return jnp.concatenate(taps, axis=-1).reshape(b, oh, ow, 16 * ci)
+
+
+def _flip_T(w):
+    """(4, 4, ci, co) -> spatially flipped, channel-transposed
+    (4, 4, co, ci) — the kernel of the transposed linear map."""
+    return w[::-1, ::-1].transpose(0, 1, 3, 2)
+
+
+@jax.custom_vjp
+def conv4x4_s2(x: jax.Array, w: jax.Array) -> jax.Array:
+    """SAME, stride-2 correlation of ``x (b, h, w, ci)`` with ``w (4, 4,
+    ci, co)`` -> ``(b, h//2, w//2, co)``; equals
+    ``lax.conv_general_dilated`` with NHWC/HWIO layouts.
+
+    Carries a hand-written VJP: autodiff through the im2col layout ops
+    produces pathological pad/scatter chains on XLA CPU (measured ~3x
+    the cost of the equivalent gemms), so the backward is expressed
+    through the same gemm kernels — ``dx`` is the flipped
+    ``convT4x4_s2``, ``dw`` one patch-matrix gemm.
+    """
+    b, h, ww, ci = x.shape
+    kh, kw, wci, co = w.shape
+    if (kh, kw) != (4, 4) or wci != ci or h % 2 or ww % 2:
+        raise ValueError(f"conv4x4_s2 needs a 4x4 kernel on even dims, "
+                         f"got x {x.shape} w {w.shape}")
+    return _im2col(x) @ w.reshape(16 * ci, co)
+
+
+def _conv_fwd(x, w):
+    ci, co = w.shape[2], w.shape[3]
+    cols = _im2col(x)
+    # the patch matrix is the residual (it is what dw contracts
+    # against); recomputing it in the backward costs more than carrying
+    # it
+    return cols @ w.reshape(16 * ci, co), (cols, w)
+
+
+def _conv_bwd(res, g):
+    cols, w = res
+    ci, co = w.shape[2], w.shape[3]
+    # dx[r] = sum_{i,a: 2i+a-1=r} g[i] . w[a]  ==  convT with the
+    # flipped/transposed kernel (out[2i+2-a'] += g[i] . w[3-a'])
+    dx = _convT(g, _flip_T(w))
+    dw = (cols.reshape(-1, 16 * ci).T @ g.reshape(-1, co)
+          ).reshape(4, 4, ci, co)
+    return dx, dw
+
+
+conv4x4_s2.defvjp(_conv_fwd, _conv_bwd)
+
+
+def _convT_phase(x, w, co):
+    """convT as one gemm over shifted copies: the four output-phase
+    kernels concatenated on the output axis."""
+    b, h, ww, ci = x.shape
+    H, W = h + 1, ww + 1
+    xs = jnp.concatenate(
+        [jnp.pad(x, ((0, 0), (s, 1 - s), (t, 1 - t), (0, 0)))
+         for s in (0, 1) for t in (0, 1)], axis=-1)
+    wt = jnp.concatenate([
+        jnp.concatenate([w[3 - (p + 2 * s), 3 - (q + 2 * t)]
+                         for s in (0, 1) for t in (0, 1)], axis=0)
+        for p in (0, 1) for q in (0, 1)], axis=1)     # (4ci, 4co)
+    g = (xs @ wt).reshape(b, H, W, 2, 2, co)
+    return g.transpose(0, 1, 3, 2, 4, 5).reshape(b, 2 * H, 2 * W, co)
+
+
+def _convT_contrib(x, w, co):
+    """convT via the contribution tensor ``x @ w (ci, 16co)`` (one gemm
+    with a healthy contraction dim even when ``co`` is tiny) overlap-
+    added into output phases."""
+    b, h, ww, ci = x.shape
+    H, W = h + 1, ww + 1
+    contrib = (x @ w.transpose(2, 0, 1, 3).reshape(ci, 16 * co)
+               ).reshape(b, h, ww, 4, 4, co)
+    phases = []
+    for p in (0, 1):
+        for q in (0, 1):
+            acc = 0
+            for s in (0, 1):
+                for t in (0, 1):
+                    acc = acc + jnp.pad(
+                        contrib[:, :, :, 3 - (p + 2 * s),
+                                3 - (q + 2 * t), :],
+                        ((0, 0), (s, 1 - s), (t, 1 - t), (0, 0)))
+            phases.append(acc)
+    g = jnp.stack(phases, axis=3).reshape(b, H, W, 2, 2, co)
+    return g.transpose(0, 1, 3, 2, 4, 5).reshape(b, 2 * H, 2 * W, co)
+
+
+def _convT(x, w):
+    """Raw convT forward (no vjp wrapping; also the ``dx`` kernel of
+    ``conv4x4_s2``)."""
+    b, h, ww, ci = x.shape
+    co = w.shape[3]
+    form = _convT_contrib if co < 8 else _convT_phase
+    g = form(x, w, co)
+    return g[:, 1:2 * h + 1, 1:2 * ww + 1, :]
+
+
+def _im2col_T(g):
+    """Patch matrix of the *transposed* map: for ``g (b, 2h, 2w, co)``
+    returns ``(b, h, w, 16*co)`` whose tap-(a, c) block is
+    ``g_pad[2i+2-a, 2j+2-c]`` — the strided gather the convT weight
+    gradient contracts against."""
+    b, H2, W2, co = g.shape
+    h, w = H2 // 2, W2 // 2
+    ph = _phase_split(jnp.pad(g, ((0, 0), (1, 1), (1, 1), (0, 0))))
+    taps = []
+    # tap a gathers rows 2i+3-a of the padded grid: phase (3-a) % 2,
+    # phase-row offset (3-a) // 2
+    for a in range(4):
+        p, s = (3 - a) % 2, (3 - a) // 2
+        for c in range(4):
+            q, t = (3 - c) % 2, (3 - c) // 2
+            taps.append(lax.slice(
+                ph, (0, p, q, s, t, 0),
+                (b, p + 1, q + 1, s + h, t + w, co)))
+    return jnp.concatenate(taps, axis=-1).reshape(b, h, w, 16 * co)
+
+
+@jax.custom_vjp
+def convT4x4_s2(x: jax.Array, w: jax.Array) -> jax.Array:
+    """SAME, stride-2 transposed convolution of ``x (b, h, w, ci)`` with
+    ``w (4, 4, ci, co)`` -> ``(b, 2h, 2w, co)``; equals
+    ``lax.conv_transpose`` (``transpose_kernel=False``) with NHWC/HWIO
+    layouts up to gemm re-association (~1 ulp).
+
+    Hand-written VJP, like ``conv4x4_s2``: ``dx`` is the flipped
+    stride-2 conv, ``dw`` one transposed-patch gemm — all expressed
+    through the same gemm kernels instead of autodiff's pad/scatter
+    chains.
+    """
+    b, h, ww, ci = x.shape
+    kh, kw, wci, co = w.shape
+    if (kh, kw) != (4, 4) or wci != ci:
+        raise ValueError(f"convT4x4_s2 needs a 4x4 kernel, got x "
+                         f"{x.shape} w {w.shape}")
+    return _convT(x, w)
+
+
+def _convT_fwd(x, w):
+    return convT4x4_s2(x, w), (x, w)
+
+
+def _convT_bwd(res, g):
+    x, w = res
+    ci, co = w.shape[2], w.shape[3]
+    # dx[i] = sum_a g[2i+2-a] . w[a]  ==  stride-2 conv of g with the
+    # flipped/transposed kernel
+    dx = _im2col(g) @ _flip_T(w).reshape(16 * co, ci)
+    # dw[a] = sum_i x[i] (x) g[2i+2-a]
+    dw = (x.reshape(-1, ci).T @ _im2col_T(g).reshape(-1, 16 * co)
+          ).reshape(ci, 4, 4, co).transpose(1, 2, 0, 3)
+    return dx, dw
+
+
+convT4x4_s2.defvjp(_convT_fwd, _convT_bwd)

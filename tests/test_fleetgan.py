@@ -1,0 +1,327 @@
+"""Fleet-GAN engine (fl.fleetgan) and its substrate: parity against the
+sequential ``Client.prepare_gan`` oracle, the gemm conv kernels
+(kernels.gan_conv), masked-sampler / masked-step properties, and
+tail-accuracy + strategy-flag plumbing through the simulator.
+
+Bitwise discipline mirrors the cohort-engine PRs: everything derived
+from RNG streams, integer draws, or layout (key streams, batch indices,
+rebalance labels, pool staging, masked no-op steps) is asserted
+bitwise; values that flow through the fused gemm kernels (trained
+generator params, synthesized images) are pinned at tight tolerances —
+XLA fusion is not bitwise-stable across loop->scan/vmap restructuring
+even on identical primitives (same caveat as
+``test_adam_scan_matches_loop``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import lax
+
+from repro.core import gan as gan_lib
+from repro.core import optim
+from repro.data.synthetic import make_dataset, stage_client_pools
+from repro.fl import client as client_lib
+from repro.fl import fleetgan
+from repro.fl import strategies as strategies_lib
+from repro.fl.strategies import STRATEGIES
+from repro.kernels import gan_conv
+
+MIN = strategies_lib.GAN_MIN_POOL
+
+
+def _tree_eq(a, b, err=""):
+    for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(a),
+                            jax.tree.leaves(b)):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb),
+            err_msg=f"{err}{jax.tree_util.keystr(pa)}")
+
+
+def _mk_clients(sizes, *, seed=0, strategy="tripleplay"):
+    strat = STRATEGIES[strategy]
+    data = make_dataset("pacs", n_per_class=30, seed=seed,
+                        longtail_gamma=4.0)
+    spec = data["spec"]
+    assert sum(sizes) <= len(data["labels"])
+    out, start = [], 0
+    for i, n in enumerate(sizes):
+        sl = slice(start, start + n)
+        start += n
+        out.append(client_lib.Client(
+            cid=i, images=data["images"][sl], labels=data["labels"][sl],
+            n_classes=spec.n_classes, strategy=strat))
+    return out
+
+
+# -- gemm conv kernels --------------------------------------------------
+
+def _lax_conv(x, w):
+    return lax.conv_general_dilated(
+        x, w, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _lax_convT(x, w):
+    return lax.conv_transpose(
+        x, w, (2, 2), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+@pytest.mark.parametrize("b,hw,ci,co", [(3, 32, 3, 16), (2, 16, 16, 24),
+                                        (2, 8, 32, 48)])
+def test_conv4x4_s2_matches_lax_with_grads(rng, b, hw, ci, co):
+    x = jnp.asarray(rng.randn(b, hw, hw, ci).astype(np.float32))
+    w = jnp.asarray(rng.randn(4, 4, ci, co).astype(np.float32) * 0.05)
+    ct = jnp.asarray(rng.randn(b, hw // 2, hw // 2, co)
+                     .astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(gan_conv.conv4x4_s2(x, w)), np.asarray(_lax_conv(x, w)),
+        atol=1e-5, rtol=0)
+    gx, gw = jax.grad(
+        lambda x, w: jnp.sum(gan_conv.conv4x4_s2(x, w) * ct),
+        argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(lambda x, w: jnp.sum(_lax_conv(x, w) * ct),
+                      argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx),
+                               atol=5e-4, rtol=0)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw),
+                               atol=5e-4, rtol=0)
+
+
+@pytest.mark.parametrize("b,hw,ci,co", [(3, 4, 48, 16), (2, 8, 16, 16),
+                                        (2, 16, 16, 3)])
+def test_convT4x4_s2_matches_lax_with_grads(rng, b, hw, ci, co):
+    x = jnp.asarray(rng.randn(b, hw, hw, ci).astype(np.float32))
+    w = jnp.asarray(rng.randn(4, 4, ci, co).astype(np.float32) * 0.05)
+    ct = jnp.asarray(rng.randn(b, hw * 2, hw * 2, co)
+                     .astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(gan_conv.convT4x4_s2(x, w)),
+        np.asarray(_lax_convT(x, w)), atol=1e-5, rtol=0)
+    gx, gw = jax.grad(
+        lambda x, w: jnp.sum(gan_conv.convT4x4_s2(x, w) * ct),
+        argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(lambda x, w: jnp.sum(_lax_convT(x, w) * ct),
+                      argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx),
+                               atol=5e-4, rtol=0)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw),
+                               atol=5e-4, rtol=0)
+
+
+# -- RNG-stream compatibility ------------------------------------------
+
+def test_gan_key_stream_matches_sequential_splits():
+    rng, steps = jax.random.PRNGKey(5), 7
+    k0, kbs, kss = gan_lib.gan_key_stream(rng, steps)
+    k0_ref, r = jax.random.split(rng)
+    np.testing.assert_array_equal(np.asarray(k0), np.asarray(k0_ref))
+    for t in range(steps):
+        r, kb, ks = jax.random.split(r, 3)
+        np.testing.assert_array_equal(np.asarray(kbs[t]), np.asarray(kb))
+        np.testing.assert_array_equal(np.asarray(kss[t]), np.asarray(ks))
+
+
+def test_gan_batch_indices_match_sequential_draws():
+    _, kbs, _ = gan_lib.gan_key_stream(jax.random.PRNGKey(3), 5)
+    idx = np.asarray(gan_lib.gan_batch_indices(kbs, 13, 9))
+    for t in range(5):
+        np.testing.assert_array_equal(
+            idx[t], np.asarray(jax.random.randint(kbs[t], (9,), 0, 13)))
+
+
+# -- masked-sampler property (hypothesis) ------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 32), st.integers(1, 64),
+       st.integers(0, 10 ** 6))
+def test_masked_sampler_never_draws_padding(n, pad, batch, seed):
+    """Pool rows [n, n+pad) of a padded client pool must carry zero
+    sampling probability for any (n, pad, batch): indices are drawn in
+    [0, n) regardless of the staged (padded) length."""
+    kbs = jax.random.split(jax.random.PRNGKey(seed), 3)
+    idx = np.asarray(gan_lib.gan_batch_indices(kbs, n, batch))
+    assert idx.shape == (3, batch)
+    assert idx.min() >= 0
+    assert idx.max() < n          # never into the pad tail, any pad
+
+
+# -- masked gan_scan steps are bitwise no-ops --------------------------
+
+def _tiny_gan(seed=0, n=12, steps=6, batch=5):
+    cfg = gan_lib.GANConfig(n_classes=3, g_dim=8, d_dim=8, z_dim=8,
+                            conv_impl="gemm")
+    rs = np.random.RandomState(seed)
+    imgs = jnp.asarray(rs.randn(n, 32, 32, 3).astype(np.float32))
+    labs = jnp.asarray(rs.randint(0, 3, n).astype(np.int32))
+    k0, kbs, kss = gan_lib.gan_key_stream(jax.random.PRNGKey(seed),
+                                          steps)
+    idx = gan_lib.gan_batch_indices(kbs, n, batch)
+    params = gan_lib.init_gan(k0, cfg)
+    opt = {"gen": optim.adam_init(params["gen"]),
+           "disc": optim.adam_init(params["disc"])}
+    return cfg, imgs, labs, idx, kss, params, opt
+
+
+def test_all_masked_gan_scan_is_bitwise_noop():
+    cfg, imgs, labs, idx, kss, params, opt = _tiny_gan()
+    active = jnp.zeros(idx.shape[0], bool)
+    p2, o2, ms = jax.jit(
+        lambda p, o: gan_lib.gan_scan(p, o, cfg, imgs, labs, idx, kss,
+                                      active=active))(params, opt)
+    _tree_eq(params, p2, "params/")
+    _tree_eq(opt, o2, "opt/")          # moments AND step counters
+    assert np.isfinite(np.asarray(ms["d_loss"])).all()
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 6))
+def test_masked_tail_steps_ignore_their_inputs(k):
+    """With the first k steps active, the masked tail must be a bitwise
+    no-op on params + both Adam states: scrambling the masked steps'
+    batch indices and RNG keys cannot change the result (same compiled
+    program, so equality is exact)."""
+    cfg, imgs, labs, idx, kss, params, opt = _tiny_gan()
+    active = jnp.arange(idx.shape[0]) < k
+    run = jax.jit(lambda ix, ks: gan_lib.gan_scan(
+        params, opt, cfg, imgs, labs, ix, ks, active=active)[:2])
+    p1, o1 = run(idx, kss)
+    p2, o2 = run(idx.at[k:].set(0), kss.at[k:].set(7))
+    _tree_eq(p1, p2, "params/")
+    _tree_eq(o1, o2, "opt/")
+
+
+# -- fleet vs sequential prepare_gan parity ----------------------------
+
+@pytest.mark.parametrize("sizes", [(24, 24, 24), (40, 21, 5)],
+                         ids=["uniform", "skewed"])
+def test_fleet_matches_sequential_prepare_gan(sizes):
+    """The stacked fused engine must reproduce the per-client loop on
+    the same fold_in key streams: rebalance labels and pool layout
+    bitwise, trained generators and synthesized images to fused-kernel
+    tolerance. The skewed case carries an ineligible n < MIN client
+    that must ride the program fully masked and keep its GAN fields
+    unset."""
+    steps = 10
+    A, B = _mk_clients(sizes), _mk_clients(sizes)
+    keys = [jax.random.PRNGKey(100 + i) for i in range(len(sizes))]
+    for i, c in enumerate(A):
+        if c.n >= MIN:
+            c.prepare_gan(keys[i], steps=steps)
+    rep = fleetgan.prepare_gan_fleet(B, keys, steps=steps)
+    assert rep.n_eligible == sum(c.n >= MIN for c in A)
+    assert sum(g for _, g in rep.groups) == len(sizes)  # masked riders in
+    for i, (a, b) in enumerate(zip(A, B)):
+        if a.n < MIN:
+            assert a.gan_params is None and b.gan_params is None
+            assert b.aug_images is None and b.aug_labels is None
+            continue
+        np.testing.assert_array_equal(a.aug_labels, b.aug_labels,
+                                      err_msg=f"client {i} labels")
+        for (pth, la), lb in zip(
+                jax.tree_util.tree_leaves_with_path(a.gan_params["gen"]),
+                jax.tree.leaves(b.gan_params["gen"])):
+            np.testing.assert_allclose(
+                np.asarray(la), np.asarray(lb), atol=2e-3, rtol=0,
+                err_msg=f"client {i} gen{jax.tree_util.keystr(pth)}")
+        if len(a.aug_labels):
+            np.testing.assert_allclose(a.aug_images, b.aug_images,
+                                       atol=5e-3, rtol=0,
+                                       err_msg=f"client {i} aug images")
+    # final staged pools: identical layout, bitwise real rows, synth
+    # rows at fused-kernel tolerance
+    ia, la, na = stage_client_pools([c.pool() for c in A])
+    ib, lb, nb = stage_client_pools([c.pool() for c in B])
+    np.testing.assert_array_equal(la, lb)
+    np.testing.assert_array_equal(na, nb)
+    for i, c in enumerate(A):
+        np.testing.assert_array_equal(ia[i, :c.n], ib[i, :c.n],
+                                      err_msg=f"client {i} real rows")
+    np.testing.assert_allclose(ia, ib, atol=5e-3, rtol=0)
+
+
+def test_fleet_empty_after_filter():
+    """A cohort where every client is below the eligibility threshold
+    must be a clean no-op: no programs run, no GAN fields written."""
+    clients = _mk_clients((5, 3, 6))
+    rep = fleetgan.prepare_gan_fleet(
+        clients, [jax.random.PRNGKey(i) for i in range(3)], steps=5)
+    assert rep.n_eligible == 0 and rep.groups == []
+    assert rep.n_synth == 0
+    for c in clients:
+        assert c.gan_params is None and c.gan_cfg is None
+        assert c.aug_images is None and c.aug_labels is None
+
+
+def test_fleet_rejects_mismatched_keys():
+    """jnp indexing clamps out-of-bounds rows, so a keys list shorter
+    than the cohort would silently reuse the last RNG stream — the
+    engine must refuse instead."""
+    clients = _mk_clients((10, 9))
+    with pytest.raises(ValueError, match="one GAN key per client"):
+        fleetgan.prepare_gan_fleet(clients, [jax.random.PRNGKey(0)],
+                                   steps=3)
+
+
+def test_fleet_rejects_empty_clients():
+    clients = _mk_clients((10, 9))
+    clients[1].images = clients[1].images[:0]
+    clients[1].labels = clients[1].labels[:0]
+    with pytest.raises(ValueError, match="empty"):
+        fleetgan.prepare_gan_fleet(
+            clients, [jax.random.PRNGKey(0), jax.random.PRNGKey(1)],
+            steps=3)
+
+
+def test_rebalance_labels_tops_up_to_local_max():
+    labels = np.array([0, 0, 0, 1, 2, 2], np.int32)
+    need = gan_lib.rebalance_labels(labels, 4)
+    hist = np.bincount(np.concatenate([labels, need]), minlength=4)
+    np.testing.assert_array_equal(hist, [3, 3, 3, 3])
+    assert gan_lib.rebalance_labels(np.zeros((0,), np.int32), 3).size == 0
+
+
+# -- simulator plumbing: tail accuracy + strategy flags ----------------
+
+def test_tripleplay_tracks_tail_acc_and_fleet_meta():
+    from repro.fl.simulator import FLConfig, run_federated
+    h = run_federated(FLConfig(
+        dataset="pacs", strategy="tripleplay", n_clients=2, rounds=2,
+        local_steps=2, n_per_class=12, batch_size=8, gan_steps=6,
+        lr=3e-3))
+    assert h.meta["gan_engine"] == "fleet"
+    assert h.meta["gan_eligible"] >= 1 and h.meta["gan_groups"]
+    assert h.meta["gan_prep_time_s"] > 0
+    assert h.meta["gan_compile_time_s"] >= 0
+    # class-0 (long tail) accuracy is tracked every eval round
+    assert len(h.tail_acc) == len(h.rounds) >= 1
+    assert all(0.0 <= t <= 1.0 for t in h.tail_acc)
+
+
+def test_use_gan_false_arms_leave_gan_fields_unset():
+    from repro.fl.simulator import FLConfig, run_federated
+    h = run_federated(FLConfig(
+        dataset="pacs", strategy="fedclip", n_clients=2, rounds=1,
+        local_steps=2, n_per_class=12, batch_size=8, lr=3e-3))
+    assert not any(k.startswith("gan_") for k in h.meta)
+    # and at the client level the strategy flag gates the pool
+    c = _mk_clients((10,), strategy="fedclip")[0]
+    assert c.gan_params is None and c.aug_images is None
+    imgs, labs = c.pool()
+    np.testing.assert_array_equal(imgs, c.images)
+    np.testing.assert_array_equal(labs, c.labels)
+
+
+def test_simulator_sequential_gan_engine_stays_available():
+    from repro.fl.simulator import FLConfig, run_federated
+    h = run_federated(FLConfig(
+        dataset="pacs", strategy="tripleplay", n_clients=2, rounds=1,
+        local_steps=2, n_per_class=12, batch_size=8, gan_steps=4,
+        lr=3e-3, gan_engine="sequential"))
+    assert h.meta["gan_engine"] == "sequential"
+    assert h.meta["gan_prep_time_s"] > 0
+    with pytest.raises(ValueError, match="gan_engine"):
+        run_federated(FLConfig(
+            dataset="pacs", strategy="tripleplay", n_clients=2,
+            rounds=1, local_steps=2, n_per_class=12, batch_size=8,
+            gan_steps=4, lr=3e-3, gan_engine="bogus"))
