@@ -26,6 +26,14 @@ A third comparison (``gan_points``) times the fleet-GAN engine
 stacked fused programs) against the sequential per-client
 ``prepare_gan`` loop at 8 clients, both steady-state.
 
+Every arm also records the bucketed program runtime's compile ledger
+(``fl.runtime``): ``n_compiles``/``compile_time_s`` per cohort point,
+the cumulative subset-round compile count across the K sweep (which
+plateaus at the power-of-two bucket count instead of growing per K),
+and the fleet-GAN ``gan_*`` program count (one train + one synthesis
+whatever the batch-size split) — so ``BENCH_fl_round.json`` tracks the
+fixed-cost drop alongside the steady-state speedups.
+
 REPRO_BENCH_SCALE=quick (default) times 3 rounds per point; =paper 10.
 """
 from __future__ import annotations
@@ -115,7 +123,10 @@ def time_sequential(frozen, tr, class_emb, ccfg, clients) -> float:
     return (time.perf_counter() - t0) / ROUNDS
 
 
-def time_cohort(strat, frozen, tr, class_emb, ccfg, clients) -> float:
+def time_cohort(strat, frozen, tr, class_emb, ccfg, clients):
+    """Returns (steady-state round seconds, runtime compile stats) —
+    the fresh per-arm ProgramRuntime makes n_compiles/compile seconds a
+    cold measurement of the arm's fixed cost."""
     engine = cohort_lib.CohortEngine(
         frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
         cfg=cohort_lib.CohortConfig(strategy=strat,
@@ -129,7 +140,10 @@ def time_cohort(strat, frozen, tr, class_emb, ccfg, clients) -> float:
     for rnd in range(ROUNDS):
         tr, _ = engine.run_round(tr, jax.random.fold_in(key, rnd))
     jax.block_until_ready(tr)
-    return (time.perf_counter() - t0) / ROUNDS
+    rt = engine.runtime
+    return ((time.perf_counter() - t0) / ROUNDS,
+            {"n_compiles": rt.n_compiles,
+             "compile_time_s": rt.compile_time_s})
 
 
 def time_subset(engine, tr, k: int) -> tuple[float, int]:
@@ -200,12 +214,12 @@ def main():
             strat, ccfg, frozen, class_emb, clients, tr, gan_rep = \
                 _setup(arm, n)
             seq = time_sequential(frozen, tr, class_emb, ccfg, clients)
-            coh = time_cohort(strat, frozen, tr, class_emb, ccfg,
-                              clients)
+            coh, compile_stats = time_cohort(strat, frozen, tr,
+                                             class_emb, ccfg, clients)
             point = {"strategy": arm, "n_clients": n,
                      "n_clients_effective": len(clients),
                      "sequential_round_s": seq, "cohort_round_s": coh,
-                     "speedup": seq / coh}
+                     "speedup": seq / coh, **compile_stats}
             if gan_rep is not None:
                 point.update({
                     "gan_engine": "fleet",
@@ -221,6 +235,10 @@ def main():
     # fleet-GAN engine vs the sequential per-client prepare_gan loop
     seq_gan = time_gan_sequential(GAN_N_CLIENTS)
     rep = time_gan_fleet(GAN_N_CLIENTS)
+    gan_rt = fleetgan.default_runtime()
+    gan_stats = gan_rt.stats()
+    gan_n_compiles, _ = gan_rt.subtotal("gan_")
+    none = {"n_compiles": 0}
     results["gan_points"] = [{
         "n_clients": GAN_N_CLIENTS, "gan_steps": GAN_STEPS,
         "n_eligible": rep.n_eligible,
@@ -228,6 +246,14 @@ def main():
         "sequential_gan_prep_s": seq_gan,
         "fleet_gan_prep_s": rep.prep_time_s,
         "fleet_gan_compile_s": rep.compile_time_s,
+        # the bucketed-runtime guarantee: one train + one synthesis
+        # program for the whole fleet (the remaining gan_* entries are
+        # the tiny per-true-batch-size key/index/noise pre-draws)
+        "fleet_gan_train_compiles":
+            int(gan_stats.get("gan_train", none)["n_compiles"]),
+        "fleet_gan_synth_compiles":
+            int(gan_stats.get("gan_synth", none)["n_compiles"]),
+        "fleet_gan_n_compiles": int(gan_n_compiles),
         "speedup": seq_gan / rep.prep_time_s}]
     print(f"fleet-GAN    n_clients={GAN_N_CLIENTS:3d} "
           f"sequential={seq_gan:7.2f} s  fleet={rep.prep_time_s:7.2f} s "
@@ -250,14 +276,24 @@ def main():
             if k > len(clients):
                 continue
             sub, uplink = time_subset(engine, tr, k)
+            # cumulative compile ledger across the K sweep: the count
+            # plateaus once every power-of-two width bucket is built —
+            # the fixed-cost drop the bucketed runtime exists for
+            sweep_stats = engine.runtime.stats().get(
+                "subset_round", {"n_compiles": 0, "compile_time_s": 0.0})
             point = {"strategy": arm, "n_clients": n_fixed,
                      "n_clients_effective": len(clients),
                      "clients_per_round": k,
-                     "subset_round_s": sub, "uplink_bytes": uplink}
+                     "subset_round_s": sub, "uplink_bytes": uplink,
+                     "n_round_compiles_cum":
+                         int(sweep_stats["n_compiles"]),
+                     "round_compile_s_cum":
+                         sweep_stats["compile_time_s"]}
             results["partial_points"].append(point)
             print(f"{arm:12s} N={len(clients):3d} K={k:3d}  "
                   f"subset={sub*1e3:7.1f} ms  "
-                  f"uplink={uplink/2**20:6.2f} MiB")
+                  f"uplink={uplink/2**20:6.2f} MiB  "
+                  f"round_compiles={point['n_round_compiles_cum']}")
     out = ROOT / "BENCH_fl_round.json"
     with open(out, "w") as f:
         json.dump(results, f, indent=1)

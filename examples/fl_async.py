@@ -5,8 +5,11 @@ Runs the same non-IID long-tail PACS instance under a skewed
 availability trace (Zipf participation, lognormal speeds) with each
 scheduler policy and reports the two quantities the scheduler trades
 off: communication rounds to a target server accuracy, and the total
-uplink payload spent getting there. Async rows also show the staleness
-profile of committed updates.
+uplink payload spent getting there — plus each policy's one-time fixed
+cost from the bucketed program runtime's ledger (program count, compile
+seconds, and the GAN engine's share), which steady-state round times
+alone would hide. Async rows also show the staleness profile of
+committed updates.
 
   PYTHONPATH=src python examples/fl_async.py --rounds 12 --clients 8
   PYTHONPATH=src python examples/fl_async.py --beta 0  # pure FedBuff->FedAvg
@@ -63,7 +66,8 @@ def main():
           f"beta={args.beta} ===")
     print(f"target accuracy: {target:.3f}")
     hdr = (f"{'policy':15s} {'final_acc':>9s} {'rounds->tgt':>11s} "
-           f"{'uplink MiB':>10s} {'mean stale':>10s} {'compile s':>9s}")
+           f"{'uplink MiB':>10s} {'mean stale':>10s} "
+           f"{'compiles':>8s} {'compile s':>9s} {'gan cmp s':>9s}")
     print(hdr + "\n" + "-" * len(hdr))
     for name, h in hists.items():
         r2t = rounds_to_target(h, target)
@@ -72,7 +76,18 @@ def main():
               f"{('%d' % r2t) if r2t else 'n/a':>11s} "
               f"{sum(h.uplink_bytes)/2**20:10.2f} "
               f"{np.mean(taus) if taus else 0.0:10.2f} "
-              f"{h.meta['compile_time_s']:9.1f}")
+              f"{h.meta['n_compiles']:8d} "
+              f"{h.meta['compile_time_s']:9.1f} "
+              f"{h.meta.get('gan_compile_time_s', 0.0):9.1f}")
+    # the fixed cost the bucketed runtime amortizes: which programs each
+    # policy actually compiled (one entry per shape *bucket*, so e.g.
+    # every K in a power-of-two bucket shares one subset_round entry)
+    print("\ncompiled programs per policy "
+          "(kind: count, from History.meta['n_compiles_by_kind']):")
+    for name, h in hists.items():
+        kinds = ", ".join(f"{k}: {v}" for k, v in
+                          h.meta["n_compiles_by_kind"].items())
+        print(f"  {name:15s} {kinds}")
     async_h = hists["async-buffered"]
     print(f"\nasync virtual timeline: commits at "
           f"{['%.1f' % t for t in async_h.vtime]}")

@@ -28,20 +28,42 @@ assert h.meta["gan_engine"] == "fleet", h.meta.get("gan_engine")
 assert h.meta["gan_eligible"] == 2 and h.meta["gan_groups"]
 assert h.meta["gan_prep_time_s"] > 0
 assert h.meta["gan_compile_time_s"] > 0
+# unified compile ledger: one bucketed train + one synthesis program
+# for the whole fleet, whatever the batch-size split
+assert h.meta["n_compiles_by_kind"]["gan_train"] == 1
+assert h.meta["n_compiles_by_kind"]["gan_synth"] == 1
+assert h.meta["n_compiles"] >= 1 and h.meta["compile_time_s"] > 0
 assert len(h.tail_acc) == len(h.rounds)
 print("cohort+fleet-GAN smoke run OK:",
       {"server_loss": h.server_loss, "uplink_bytes": h.uplink_bytes,
        "gan_groups": h.meta["gan_groups"],
+       "n_compiles": h.meta["n_compiles"],
        "gan_prep_time_s": round(h.meta["gan_prep_time_s"], 3)})
 
-h = run_federated(FLConfig(
-    dataset="pacs", strategy="fedclip", n_clients=4, rounds=2,
-    local_steps=3, n_per_class=12, batch_size=8, lr=3e-3,
-    participation="sync-partial", clients_per_round=2, trace="skewed"))
+from repro.fl.runtime import ProgramRuntime
+
+# sync-partial smoke doubles as the bucketed-runtime K sweep: two runs
+# at K=2 and K=3 share one ProgramRuntime, and both widths land in the
+# same power-of-two bucket — the cache must hold exactly ONE
+# subset-round program after the sweep (a second entry means a silent
+# per-K recompile regression)
+rt = ProgramRuntime()
+base = dict(dataset="pacs", strategy="fedclip", n_clients=4, rounds=2,
+            local_steps=3, n_per_class=12, batch_size=8, lr=3e-3,
+            participation="sync-partial", trace="skewed")
+h = run_federated(FLConfig(**base, clients_per_round=2), runtime=rt)
 assert h.meta["participation"] == "sync-partial"
 assert all(len(p) == 2 for p in h.participation)
 assert all(b > 0 for b in h.uplink_bytes)
-print("sync-partial smoke run OK:", {"participation": h.participation})
+assert h.meta["n_compiles_by_kind"]["subset_round"] == 1, h.meta
+h2 = run_federated(FLConfig(**base, clients_per_round=3), runtime=rt)
+assert all(len(p) == 3 for p in h2.participation)
+assert h2.meta["n_compiles_by_kind"]["subset_round"] == 1, \
+    ("K=3 recompiled the round program despite sharing K=2's bucket",
+     h2.meta["n_compiles_by_kind"])
+print("sync-partial smoke run OK:",
+      {"participation": h.participation,
+       "n_compiles_by_kind": h2.meta["n_compiles_by_kind"]})
 
 h = run_federated(FLConfig(
     dataset="pacs", strategy="fedclip", n_clients=4, rounds=2,

@@ -21,6 +21,13 @@ Two execution granularities share the same step math:
   inside a stacked cohort program. ``gan_key_stream`` /
   ``gan_batch_indices`` reproduce the exact ``train_gan`` RNG stream so
   both granularities consume identical keys and batches.
+- ``gan_scan_bucketed`` / ``train_step_bucketed`` — the bucketed form:
+  the minibatch pads to a shared bucket and every batch-mean loss is
+  computed as the masked mean ``sum(per_row * mask) / n_true``, so
+  padded rows contribute exactly zero gradient and all batch-size
+  groups share one compile; per-step noise is pre-drawn at the true
+  batch shape (``gan_z_stream`` — threefry is not shape-stable) to keep
+  the RNG stream bitwise the sequential one.
 
 ``GANConfig.conv_impl`` selects the convolution lowering: ``"lax"`` (the
 original ``lax.conv``/``conv_transpose`` primitives) or ``"gemm"``
@@ -117,31 +124,29 @@ def discriminate(disc, cfg: GANConfig, images, labels, *,
     return logit + proj
 
 
-def _bce(logits, target):
-    return jnp.mean(jnp.maximum(logits, 0) - logits * target +
-                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
-
-
-def train_step_impl(params, opt_states, batch, cfg: GANConfig, rng):
-    """One alternating D/G update. batch = (images, labels). Pure — the
-    shared body of the per-step ``train_step`` dispatch and the fused
-    ``gan_scan`` loop."""
+def _train_step_core(params, opt_states, batch, cfg: GANConfig, z, z2,
+                     batch_mean, feat_mean):
+    """The one alternating D/G update body shared by every execution
+    granularity. ``batch_mean`` reduces per-row loss terms over the
+    batch and ``feat_mean`` averages feature rows — the plain means for
+    the exact-batch paths, masked mean-corrected forms for the bucketed
+    path. The loss *definition* (objectives, feature-matching weight,
+    Adam b1) lives only here, so the granularities cannot drift."""
     images, labels = batch
-    B = images.shape[0]
-    kz, kz2 = jax.random.split(rng)
-    z = jax.random.normal(kz, (B, cfg.z_dim))
+
+    def bce(logits, target):
+        return batch_mean(jnp.maximum(logits, 0) - logits * target +
+                          jnp.log1p(jnp.exp(-jnp.abs(logits))))
 
     def d_loss(disc):
         fake = generate(params["gen"], cfg, z, labels)
         lr_ = discriminate(disc, cfg, images, labels)
         lf = discriminate(disc, cfg, lax.stop_gradient(fake), labels)
-        return _bce(lr_, 1.0) + _bce(lf, 0.0)
+        return bce(lr_, 1.0) + bce(lf, 0.0)
 
     dl, dg = jax.value_and_grad(d_loss)(params["disc"])
     disc, d_opt = optim.adam_update(dg, opt_states["disc"],
                                     params["disc"], lr=cfg.lr, b1=0.5)
-
-    z2 = jax.random.normal(kz2, (B, cfg.z_dim))
 
     def g_loss(gen):
         fake = generate(gen, cfg, z2, labels)
@@ -152,8 +157,8 @@ def train_step_impl(params, opt_states, batch, cfg: GANConfig, rng):
         # feature matching (Salimans et al. 2016): anchors G's statistics
         # to the data manifold — without it the small generator collapses
         # into the zero-image saddle of the projection discriminator
-        fm = jnp.mean((feat_r.mean(0) - feat_f.mean(0)) ** 2)
-        return _bce(lf, 1.0) + 10.0 * fm
+        fm = jnp.mean((feat_mean(feat_r) - feat_mean(feat_f)) ** 2)
+        return bce(lf, 1.0) + 10.0 * fm
 
     gl, gg = jax.value_and_grad(g_loss)(params["gen"])
     gen, g_opt = optim.adam_update(gg, opt_states["gen"],
@@ -163,7 +168,48 @@ def train_step_impl(params, opt_states, batch, cfg: GANConfig, rng):
             {"d_loss": dl, "g_loss": gl})
 
 
+def train_step_impl(params, opt_states, batch, cfg: GANConfig, rng):
+    """One alternating D/G update. batch = (images, labels). Pure — the
+    shared body of the per-step ``train_step`` dispatch and the fused
+    ``gan_scan`` loop; noise is drawn in-program from ``rng`` at the
+    exact batch shape."""
+    B = batch[0].shape[0]
+    kz, kz2 = jax.random.split(rng)
+    z = jax.random.normal(kz, (B, cfg.z_dim))
+    z2 = jax.random.normal(kz2, (B, cfg.z_dim))
+    return _train_step_core(params, opt_states, batch, cfg, z, z2,
+                            batch_mean=jnp.mean,
+                            feat_mean=lambda f: f.mean(0))
+
+
 train_step = jax.jit(train_step_impl, static_argnums=(3,))
+
+
+def train_step_bucketed(params, opt_states, batch, cfg: GANConfig, z, z2,
+                        n_true):
+    """One alternating D/G update on a minibatch padded to a shared
+    bucket: rows ``>= n_true`` of ``batch``/``z``/``z2`` are padding.
+
+    The mean-correction contract: every batch-mean loss term of
+    ``train_step_impl`` is computed as the *masked* mean
+    ``sum(per_row * mask) / n_true`` — i.e. the padded-batch mean
+    rescaled by ``bucket / n_true`` — and the feature-matching
+    statistics are masked means likewise. Because the discriminator and
+    generator are purely per-row networks, a padded row's contribution
+    to every loss term is multiplied by exactly 0.0 before the
+    reduction, so gradients (and therefore the Adam update on params +
+    both moment/step states) match the unpadded ``train_step_impl`` on
+    the true rows up to float reassociation of the batch reductions —
+    this is what lets every GAN batch-size group share one compile.
+    ``z``/``z2`` are the pre-drawn ``gan_z_stream`` noise (padded rows
+    zero), keeping the RNG stream bitwise the sequential one."""
+    B = batch[0].shape[0]
+    mask = (jnp.arange(B) < n_true).astype(jnp.float32)
+    n = jnp.asarray(n_true, jnp.float32)
+    return _train_step_core(
+        params, opt_states, batch, cfg, z, z2,
+        batch_mean=lambda t: jnp.sum(t * mask) / n,
+        feat_mean=lambda f: jnp.sum(f * mask[:, None], axis=0) / n)
 
 
 def gan_key_stream(rng, steps: int):
@@ -190,6 +236,24 @@ def gan_batch_indices(batch_keys, n, batch: int):
     padded pool carry zero sampling probability by construction."""
     return jax.vmap(
         lambda k: jax.random.randint(k, (batch,), 0, n))(batch_keys)
+
+
+def gan_z_stream(step_keys, batch: int, z_dim: int):
+    """Pre-draw the per-step generator noise ``train_step_impl`` would
+    draw in-program: for each step key ``k``, ``kz, kz2 = split(k)``
+    then ``normal(kz, (batch, z_dim))`` / ``normal(kz2, ...)``. Returns
+    ``(z (steps, batch, z_dim), z2 (steps, batch, z_dim))`` — bitwise
+    the in-program draws. The bucketed fleet engine draws these eagerly
+    at each client's TRUE batch size and pads afterwards, because
+    threefry draws are not shape-stable: drawing at the padded bucket
+    shape would change every client's noise stream and break parity
+    with the sequential oracle."""
+    def one(k):
+        kz, kz2 = jax.random.split(k)
+        return (jax.random.normal(kz, (batch, z_dim)),
+                jax.random.normal(kz2, (batch, z_dim)))
+
+    return jax.vmap(one)(step_keys)
 
 
 def gan_scan(params, opt_states, cfg: GANConfig, images, labels, idx,
@@ -223,6 +287,35 @@ def gan_scan(params, opt_states, cfg: GANConfig, images, labels, idx,
         return (p2, o2), m
 
     xs = (idx, step_keys, active) if masked else (idx, step_keys)
+    (params, opt_states), ms = lax.scan(body, (params, opt_states), xs)
+    return params, opt_states, ms
+
+
+def gan_scan_bucketed(params, opt_states, cfg: GANConfig, images, labels,
+                      idx, z, z2, n_true, *, active=None):
+    """Bucketed form of :func:`gan_scan`: the minibatch axis of ``idx
+    (steps, bucket)`` and the pre-drawn noise ``z``/``z2`` ``(steps,
+    bucket, z_dim)`` is padded to a shared bucket, and every step runs
+    :func:`train_step_bucketed` with the mean-correction mask derived
+    from the (traced) true batch size ``n_true`` — so one compile serves
+    every batch-size group of a client fleet. ``active`` masks whole
+    steps into bitwise no-ops exactly as in :func:`gan_scan`."""
+    masked = active is not None
+
+    def body(carry, x):
+        p, o = carry
+        if masked:
+            ix, za, zb, live = x
+        else:
+            ix, za, zb = x
+        p2, o2, m = train_step_bucketed(
+            p, o, (images[ix], labels[ix]), cfg, za, zb, n_true)
+        if masked:
+            p2 = jax.tree.map(lambda a, b: jnp.where(live, a, b), p2, p)
+            o2 = jax.tree.map(lambda a, b: jnp.where(live, a, b), o2, o)
+        return (p2, o2), m
+
+    xs = (idx, z, z2, active) if masked else (idx, z, z2)
     (params, opt_states), ms = lax.scan(body, (params, opt_states), xs)
     return params, opt_states, ms
 

@@ -41,15 +41,28 @@ parity tests can drive both paths with identical batches.
 
 Partial participation (``fl.sched``) builds on the same staging: the
 pools of *all* clients stay device-resident, and a subset round is the
-same fused program prefixed with a gather — ``pool_staged[sel]`` for a
-fixed cohort width K, so selecting a different subset each round never
-re-uploads data or recompiles. ``run_subset_round`` aggregates in-program
-(sync-partial); ``run_wave`` stops before aggregation and returns the
-stacked quantized deltas, which the async scheduler buffers on the host
-and commits with staleness-discounted weights. Heterogeneous per-client
-local-step counts (availability traces) run inside the same fixed-length
-scan via the ``active`` mask of ``optim.adam_scan`` — a masked step is a
-bitwise no-op on (params, opt state).
+same fused program prefixed with a gather — ``pool_staged[sel]`` — so
+selecting a different subset each round never re-uploads data.
+``run_subset_round`` aggregates in-program (sync-partial); ``run_wave``
+stops before aggregation and returns the stacked quantized deltas,
+which the async scheduler buffers on the host and commits with
+staleness-discounted weights. Heterogeneous per-client local-step
+counts (availability traces) run inside the same fixed-length scan via
+the ``active`` mask of ``optim.adam_scan`` — a masked step is a bitwise
+no-op on (params, opt state).
+
+Every fused program compiles and executes through the shared
+:class:`repro.fl.runtime.ProgramRuntime` (AOT ``lower().compile()``,
+one cache, per-kind compile accounting), and subset/wave cohort widths
+are padded to power-of-two buckets (``runtime.bucket_width``): a
+selection of K clients runs at width ``B >= K`` with pad rows that
+gather client 0's staged pool, receive zero-filled batch indices (the
+true K rows keep the exact ``round_indices`` sample stream — indices
+are drawn outside the program at the true width), and carry zero
+aggregation weight, so padding never leaks into sampling, aggregation,
+or uplink accounting while a K-sweep compiles O(log N) programs instead
+of O(N). K=N never pads (``bucket_width(N, N) == N``), keeping the
+degenerate full-sync case bit-identical to the gather-free full round.
 """
 from __future__ import annotations
 
@@ -65,6 +78,7 @@ from repro.core import losses, optim, quant
 from repro.core.quant import tree_bytes
 from repro.data.synthetic import stage_client_pools
 from repro.fl import client as client_lib
+from repro.fl import runtime as runtime_lib
 from repro.fl import server
 from repro.fl import strategies as strategies_lib
 from repro.fl.strategies import Strategy
@@ -82,13 +96,44 @@ class CohortConfig:
     donate: bool = True       # donate the global-trainable buffers
 
 
-def stage_encoded_pools(frozen, ccfg, *, use_lora: bool, imgs, put=None,
-                        chunk: int = 512):
-    """Encode padded client pools ``(C, P, H, W, ch)`` through the
+def encode_rows(frozen, ccfg, *, use_lora: bool, rows, runtime=None,
+                chunk: int = 512):
+    """Encode ``(n, H, W, ch)`` image rows through the
     trainable-independent prefix of the forward — the whole frozen
     backbone (pooled features) for adapter-only arms, the patch
-    embedding (tokens) for LoRA arms — in fixed-size chunks, one jitted
-    program reused across chunks.
+    embedding (tokens) for LoRA arms — in fixed-size chunks through the
+    shared program runtime. Full chunks run at ``chunk`` rows; the
+    ragged tail pads to its power-of-two bucket, so any row count
+    reuses O(log chunk) compiles while the pad waste stays below the
+    tail itself (never a full chunk)."""
+    runtime = runtime or runtime_lib.ProgramRuntime()
+    n = rows.shape[0]
+    flat = jnp.asarray(rows)
+
+    def build():
+        if use_lora:
+            return lambda fz, x: clip_lib.embed_patches(fz, ccfg, x)
+        return lambda fz, x: clip_lib.encode_image(fz, ccfg, x)
+
+    def encode(piece):
+        args = (frozen, piece)
+        return runtime.compile("stage_encode", build, args,
+                               static_key=(ccfg, use_lora))(*args)
+
+    out = [encode(flat[i:i + chunk])
+           for i in range(0, n - n % chunk, chunk)]
+    tail = n % chunk
+    if tail:
+        ck = runtime_lib.bucket_rows(tail, chunk)
+        out.append(encode(runtime_lib.pad_leading(
+            flat[n - tail:], ck))[:tail])
+    return jnp.concatenate(out) if len(out) != 1 else out[0][:n]
+
+
+def stage_encoded_pools(frozen, ccfg, *, use_lora: bool, imgs, put=None,
+                        chunk: int = 512, runtime=None):
+    """Encode padded client pools ``(C, P, H, W, ch)`` via
+    :func:`encode_rows` and reshape back to the cohort layout.
 
     This is the single staging pipeline for every pool that enters the
     cohort engine: raw client data and the fleet-GAN rebalancing sets
@@ -96,13 +141,10 @@ def stage_encoded_pools(frozen, ccfg, *, use_lora: bool, imgs, put=None,
     pools cost one staging pass like any other pool."""
     put = jnp.asarray if put is None else put
     C, P = imgs.shape[:2]
-    flat = jnp.asarray(imgs.reshape(C * P, *imgs.shape[2:]))
-    stage = jax.jit(
-        (lambda x: clip_lib.embed_patches(frozen, ccfg, x))
-        if use_lora else
-        (lambda x: clip_lib.encode_image(frozen, ccfg, x)))
-    staged = jnp.concatenate(
-        [stage(flat[i:i + chunk]) for i in range(0, C * P, chunk)])
+    staged = encode_rows(
+        frozen, ccfg, use_lora=use_lora,
+        rows=jnp.asarray(imgs).reshape(C * P, *imgs.shape[2:]),
+        runtime=runtime, chunk=chunk)
     return put(staged.reshape(C, P, *staged.shape[1:]))
 
 
@@ -179,8 +221,11 @@ class CohortEngine:
     """
 
     def __init__(self, *, frozen, ccfg, class_emb,
-                 clients: Sequence[client_lib.Client], cfg: CohortConfig):
+                 clients: Sequence[client_lib.Client], cfg: CohortConfig,
+                 runtime=None, gan_job=None):
         self.cfg = cfg
+        self.runtime = runtime if runtime is not None else \
+            runtime_lib.ProgramRuntime()
         self.n_clients = len(clients)
         empty = [c.cid for c in clients if len(c.pool()[1]) == 0]
         if empty:
@@ -188,7 +233,34 @@ class CohortEngine:
                 f"clients {empty} have empty pools; federated rounds "
                 "(sequential or cohort) need every participant to hold "
                 "data — drop them from the cohort")
-        imgs, labs, lens = stage_client_pools([c.pool() for c in clients])
+        if gan_job is not None and cfg.mesh is not None:
+            # the pending-GAN overlap path scatters into the staged
+            # buffer with a plain .at[] update; keep the sharded layout
+            # on the simple resolve-first path
+            gan_job.resolve()
+            gan_job = None
+        if gan_job is not None:
+            # Overlap fleet-GAN prep with pool staging: the GAN job's
+            # rebalancing-set *sizes and labels* are host-known at launch
+            # (rebalance_labels is a label histogram), so the padded pool
+            # layout, lens, and labels are final now — only the
+            # synthesized image contents are still computing on device.
+            # Stage the raw rows immediately (the zero rows reserved for
+            # the synthetic images are overwritten in feature space once
+            # the job resolves below).
+            pools = []
+            for i, c in enumerate(clients):
+                nd = gan_job.need.get(i, np.zeros((0,), np.int32))
+                pools.append((
+                    np.concatenate([
+                        np.asarray(c.images, np.float32),
+                        np.zeros((len(nd), *c.images.shape[1:]),
+                                 np.float32)]),
+                    np.concatenate([np.asarray(c.labels, np.int32),
+                                    nd])))
+        else:
+            pools = [c.pool() for c in clients]
+        imgs, labs, lens = stage_client_pools(pools)
         self.client_n = np.asarray([c.n for c in clients], np.float32)
         weights = self.client_n / self.client_n.sum()
         # trace-assigned compute heterogeneity: client i runs
@@ -228,7 +300,7 @@ class CohortEngine:
         # augmented via Client.pool() and stage like any other pool.
         self.pool_staged = stage_encoded_pools(
             frozen, ccfg, use_lora=cfg.strategy.use_lora, imgs=imgs,
-            put=put)
+            put=put, runtime=self.runtime)
         self.pool_labs = put(labs)
         self.lens = jnp.asarray(lens, jnp.int32)
         self.weights = jnp.asarray(weights, jnp.float32)
@@ -236,11 +308,52 @@ class CohortEngine:
         self.class_emb = class_emb
         self.ccfg = ccfg
         self._uplink_per_client: Optional[int] = None
-        self._sample = jax.jit(sample_batch_indices,
-                               static_argnums=(2, 3))
-        self._round = self._build_round()
-        self._subset_rounds = {}   # K -> jitted train+aggregate program
-        self._wave_rounds = {}     # K -> jitted train-only wave program
+        # programs the engine closes over self.cfg/self.ccfg for: the
+        # runtime cache key must carry those statics so engines sharing
+        # one runtime (benchmark sweeps) never collide
+        self._static_key = (cfg.strategy, ccfg, cfg.local_steps,
+                            cfg.batch_size, cfg.lr, self._het,
+                            self.max_steps, cfg.mesh)
+        if gan_job is not None:
+            self._merge_gan_features(gan_job, clients)
+
+    def _merge_gan_features(self, gan_job, clients):
+        """Land a pending fleet-GAN job into the already-staged pools:
+        resolve the job (blocks on the GAN device work that overlapped
+        staging), encode the synthesized rows through the same staging
+        program, and scatter them into their reserved slots. One staging
+        pipeline, two passes over disjoint rows."""
+        gan_job.resolve()
+        aug = [(i, c.aug_images) for i, c in enumerate(clients)
+               if c.aug_images is not None and len(c.aug_images)]
+        if not aug:
+            return
+        rows = np.concatenate([a for _, a in aug]).astype(np.float32)
+        feats = encode_rows(
+            self.frozen, self.ccfg, use_lora=self.cfg.strategy.use_lora,
+            rows=rows, runtime=self.runtime)
+        ci = np.concatenate([np.full(len(a), i, np.int32)
+                             for i, a in aug])
+        # synthetic rows sit right after client i's raw rows (the pool
+        # layout Client.pool() produces)
+        ri = np.concatenate([clients[i].n + np.arange(len(a))
+                             for i, a in aug]).astype(np.int32)
+        self.pool_staged = self.pool_staged.at[
+            jnp.asarray(ci), jnp.asarray(ri)].set(feats)
+
+    def _sample_idx(self, key, lens, steps: int):
+        """Per-round batch indices through the runtime cache (kind
+        ``sample_idx`` — one tiny program per distinct selection
+        width)."""
+        batch = self.cfg.batch_size
+
+        def build():
+            return lambda k, l: sample_batch_indices(k, l, steps, batch)
+
+        args = (key, lens)
+        return self.runtime.compile(
+            "sample_idx", build, args,
+            static_key=(steps, batch))(*args)
 
     # -- uplink accounting --------------------------------------------
     def per_client_uplink_bytes(self, global_tr) -> int:
@@ -335,14 +448,14 @@ class CohortEngine:
                                                   delta)
             return new_global, loss, acc
 
-        donate = (0,) if self.cfg.donate else ()
-        return jax.jit(round_fn, donate_argnums=donate)
+        return round_fn
 
     def _build_subset_round(self):
-        """Sync-partial round at fixed cohort width K: gather the
-        selected clients' already-staged pools (no re-upload, one compile
-        per K), train, quantize, and aggregate in-program with the
-        host-normalized subset weights."""
+        """Sync-partial round at a fixed (bucketed) cohort width: gather
+        the selected clients' already-staged pools (no re-upload, one
+        compile per width bucket), train, quantize, and aggregate
+        in-program with the host-normalized subset weights (zero for pad
+        rows)."""
         het = self._het
 
         def round_fn(global_tr, sel, n_steps, idx, pool_staged,
@@ -356,8 +469,7 @@ class CohortEngine:
                                                   delta)
             return new_global, loss, acc
 
-        donate = (0,) if self.cfg.donate else ()
-        return jax.jit(round_fn, donate_argnums=donate)
+        return round_fn
 
     def _build_wave(self):
         """Async wave: identical local training, but the program stops
@@ -375,7 +487,22 @@ class CohortEngine:
                 global_tr, staged, labs, idx, n_steps if het else None,
                 frozen, class_emb)
 
-        return jax.jit(wave_fn)
+        return wave_fn
+
+    def _donate(self):
+        return (0,) if self.cfg.donate else ()
+
+    def _bucket_inputs(self, sel_dev, n_steps, idx, B: int):
+        """Pad the cohort-axis inputs of a width-K selection to the
+        width-B bucket: pad rows gather client 0's staged pool, sample
+        index 0 every step, and run the minimum step count — all of it
+        thrown away (zero aggregation weight, metrics sliced to K).
+        The true rows' arrays are untouched: indices were drawn at the
+        true K *before* padding, so the sample stream is exactly the
+        unbucketed one."""
+        return (runtime_lib.pad_leading(sel_dev, B),
+                runtime_lib.pad_leading(n_steps, B, fill=1),
+                runtime_lib.pad_leading(idx, B))
 
     def _subset_inputs(self, sel, key, n_steps=None):
         sel = np.asarray(sel, np.int32)
@@ -408,8 +535,11 @@ class CohortEngine:
                     "Client.step_mult before building the engine")
         sel_dev = jnp.asarray(sel)
         lens_sel = jnp.take(self.lens, sel_dev)
-        idx = self._sample(key, lens_sel, self.max_steps,
-                           self.cfg.batch_size)
+        # indices are drawn at the TRUE selection width, before any
+        # bucket padding — threefry draws are not shape-stable, so the
+        # pad must never touch the sample stream (round_indices stays
+        # the oracle for the real rows)
+        idx = self._sample_idx(key, lens_sel, self.max_steps)
         return sel, sel_dev, jnp.asarray(n_steps, jnp.int32), idx
 
     def run_subset_round(self, global_tr, sel, key, n_steps=None):
@@ -417,38 +547,51 @@ class CohortEngine:
         set; canonicalized to sorted order so selection is
         permutation-invariant and K=N reproduces the full round).
         Aggregation weights are the selected clients' sample counts,
-        renormalized over the subset. ``n_steps`` optionally overrides
-        the per-client step counts (aligned with ``sel``'s order)."""
+        renormalized over the subset — padding rows of the width bucket
+        carry weight zero. ``n_steps`` optionally overrides the
+        per-client step counts (aligned with ``sel``'s order)."""
         sel, sel_dev, n_steps, idx = self._subset_inputs(sel, key,
                                                          n_steps)
         K = len(sel)
-        weights = self.client_n[sel] / self.client_n[sel].sum()
-        weights = jnp.asarray(weights, jnp.float32)
-        server.check_weights(weights, K)
-        if K not in self._subset_rounds:
-            self._subset_rounds[K] = self._build_subset_round()
-        new_tr, loss, acc = self._subset_rounds[K](
-            global_tr, sel_dev, n_steps, idx, self.pool_staged,
-            self.pool_labs, weights, self.frozen, self.class_emb)
+        B = runtime_lib.bucket_width(K, self.n_clients)
+        weights = np.zeros(B, np.float32)
+        weights[:K] = self.client_n[sel] / self.client_n[sel].sum()
+        weights = jnp.asarray(weights)
+        server.check_weights(weights, B)
+        if B > K:
+            sel_dev, n_steps, idx = self._bucket_inputs(
+                sel_dev, n_steps, idx, B)
+        args = (global_tr, sel_dev, n_steps, idx, self.pool_staged,
+                self.pool_labs, weights, self.frozen, self.class_emb)
+        new_tr, loss, acc = self.runtime.compile(
+            "subset_round", self._build_subset_round, args,
+            static_key=self._static_key,
+            donate_argnums=self._donate())(*args)
         return new_tr, {
-            "loss": np.asarray(loss), "acc": np.asarray(acc),
+            "loss": np.asarray(loss)[:K], "acc": np.asarray(acc)[:K],
             "uplink_bytes": K * self.per_client_uplink_bytes(global_tr),
             "sel": sel}
 
     def run_wave(self, global_tr, sel, key, n_steps=None):
         """Train client positions ``sel`` from ``global_tr`` without
         committing: returns (stacked quantized delta tree, metrics).
-        Slice per-client updates out with ``slice_client_delta``."""
+        Slice per-client updates out with ``slice_client_delta`` — the
+        true clients occupy rows [0, K) of the width bucket; pad rows
+        are never sliced or committed."""
         sel, sel_dev, n_steps, idx = self._subset_inputs(sel, key,
                                                          n_steps)
         K = len(sel)
-        if K not in self._wave_rounds:
-            self._wave_rounds[K] = self._build_wave()
-        delta, loss, acc = self._wave_rounds[K](
-            global_tr, sel_dev, n_steps, idx, self.pool_staged,
-            self.pool_labs, self.frozen, self.class_emb)
+        B = runtime_lib.bucket_width(K, self.n_clients)
+        if B > K:
+            sel_dev, n_steps, idx = self._bucket_inputs(
+                sel_dev, n_steps, idx, B)
+        args = (global_tr, sel_dev, n_steps, idx, self.pool_staged,
+                self.pool_labs, self.frozen, self.class_emb)
+        delta, loss, acc = self.runtime.compile(
+            "wave_round", self._build_wave, args,
+            static_key=self._static_key)(*args)
         return delta, {
-            "loss": np.asarray(loss), "acc": np.asarray(acc),
+            "loss": np.asarray(loss)[:K], "acc": np.asarray(acc)[:K],
             "uplink_bytes": K * self.per_client_uplink_bytes(global_tr),
             "sel": sel}
 
@@ -463,11 +606,13 @@ class CohortEngine:
                 " — use run_subset_round(sel=arange(n_clients)) so the "
                 "masked scan honors the heterogeneous step counts")
         uplink = self.uplink_bytes(global_tr)
-        idx = self._sample(key, self.lens, self.cfg.local_steps,
-                           self.cfg.batch_size)
-        new_tr, loss, acc = self._round(
-            global_tr, idx, self.pool_staged, self.pool_labs,
-            self.weights, self.frozen, self.class_emb)
+        idx = self._sample_idx(key, self.lens, self.cfg.local_steps)
+        args = (global_tr, idx, self.pool_staged, self.pool_labs,
+                self.weights, self.frozen, self.class_emb)
+        new_tr, loss, acc = self.runtime.compile(
+            "full_round", self._build_round, args,
+            static_key=self._static_key,
+            donate_argnums=self._donate())(*args)
         return new_tr, {"loss": np.asarray(loss),
                         "acc": np.asarray(acc),
                         "uplink_bytes": uplink}

@@ -3,48 +3,61 @@
 The paper's third "play" — client-side conditional-GAN over-sampling of
 tail classes (§III-B) — ran as the pre-cohort-engine pattern: a Python
 loop over clients, each client a Python loop of per-step ``train_step``
-dispatches, so tripleplay setup cost ``n_clients x gan_steps`` device
-round-trips while local training ran as one fused program. This module
-trains every client's GAN through ``gan.gan_scan`` (one ``lax.scan``
-over GAN steps, donated params + Adam states) under a ``jax.vmap`` over
-a stacked cohort axis, then synthesizes every client's rebalancing set
-in one more stacked dispatch.
+dispatches. This module trains every client's GAN through
+``gan.gan_scan_bucketed`` (one ``lax.scan`` over GAN steps, donated
+params + Adam states) under a single ``jax.vmap`` over the whole stacked
+cohort, then synthesizes every client's rebalancing set in one more
+stacked dispatch — **one train compile and one synthesis compile for the
+entire fleet**, regardless of how many distinct GAN batch sizes the
+population carries.
 
-Layout and masking:
+Layout, masking, and the batch bucket:
 
-- Per-client pools are padded to one fixed shape per group
+- Per-client pools are padded to one fixed shape
   (``stage_client_pools``); batch indices are drawn in ``[0, n_i)``
   (``gan.gan_batch_indices``) so padded rows carry zero sampling
   probability — the same masked-sampling discipline as ``fl.cohort``.
 - Clients below ``strategies.GAN_MIN_POOL`` ride inside the stacked
   program with an all-False ``active`` mask: every one of their steps is
-  a bitwise no-op on params + both Adam states (the het-local-steps
-  masking of the scheduler PRs), and no GAN fields are written back.
-- The GAN minibatch is ``strategies.gan_batch_size(n)`` — ``min(64,
-  n)``-ish, *data-dependent*. A batch cannot be padded without changing
-  the per-step math (losses are means over the batch), so clients are
-  grouped by batch size and each group is one fused compile. Real
-  (non-degenerate) partitions have few distinct sizes; the common
-  all-``n >= 64`` case is a single compile.
+  a bitwise no-op on params + both Adam states, and no GAN fields are
+  written back.
+- The GAN minibatch is ``strategies.gan_batch_size(n)`` — data-dependent
+  and historically the one unpaddable shape (losses are batch means).
+  The bucketed runtime pads every client's minibatch to the cohort-wide
+  bucket ``B = max_i gan_batch_size(n_i)`` and corrects the means:
+  ``gan.train_step_bucketed`` computes every batch-mean loss as the
+  masked mean ``sum(per_row * mask) / n_true`` (the padded-batch mean
+  rescaled by true-batch/padded-batch), which zeroes each padded row's
+  gradient contribution exactly. Per-step noise is pre-drawn at the TRUE
+  batch shape (``gan.gan_z_stream``) and zero-padded, because threefry
+  draws are not shape-stable under padding.
 
 RNG compatibility: client ``i`` consumes exactly the
 ``fold_in(rng, strategies.GAN_RNG_OFFSET + i)`` stream of the
 sequential ``Client.prepare_gan`` path (``gan.gan_key_stream``), so the
 sequential loop stays alive as the parity oracle: init params, batch
-indices, and synthesis z-draws match it bitwise; trained params match
-up to gemm-kernel re-association (``kernels.gan_conv`` — XLA fusion is
-not bitwise-stable across loop->scan/vmap restructuring even on
-identical primitives, same caveat as ``test_adam_scan_matches_loop``).
+indices, per-step noise, and synthesis z-draws match it bitwise;
+trained params match up to gemm-kernel re-association plus the
+mean-correction's reduction reordering (``kernels.gan_conv`` — XLA
+fusion is not bitwise-stable across loop->scan/vmap restructuring even
+on identical primitives, same caveat as ``test_adam_scan_matches_loop``).
 
-Compile cost is measured separately from steady-state execution
-(AOT ``lower().compile()`` timing, cached across calls), mirroring the
-``History.meta["compile_time_s"]`` hygiene of the round scheduler.
+Execution is two-phase so GAN prep can overlap CLIP pool staging
+(``fl.cohort`` accepts a pending job): :func:`launch_gan_fleet`
+dispatches every device program through the shared
+:class:`repro.fl.runtime.ProgramRuntime` without forcing a host sync
+and returns a :class:`FleetGANJob`; ``job.resolve()`` materializes the
+results onto the clients. :func:`prepare_gan_fleet` is the blocking
+composition of the two. Compile cost is charged to the runtime's
+``gan_*`` kinds (AOT ``lower().compile()`` timing, cached) and reported
+via ``FleetGANReport.compile_time_s`` — the
+``History.meta["gan_compile_time_s"]`` share of the one cache.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,25 +66,36 @@ import numpy as np
 from repro.core import gan as gan_lib
 from repro.core import optim
 from repro.data.synthetic import stage_client_pools
+from repro.fl import runtime as runtime_lib
 from repro.fl import strategies as strategies_lib
 
-_EXEC_CACHE: Dict = {}
+# module-level default so standalone callers (tests, benchmarks) share
+# executables across calls; the simulator threads its per-run runtime
+# through instead so History.meta reports one unified cache
+_DEFAULT_RUNTIME = runtime_lib.ProgramRuntime()
+
+
+def default_runtime() -> runtime_lib.ProgramRuntime:
+    """The module-level runtime standalone calls compile through —
+    benchmarks read its ledger (``stats()``/``subtotal("gan_")``) after
+    a prep that wasn't given an explicit runtime."""
+    return _DEFAULT_RUNTIME
 
 
 def clear_cache():
-    """Drop the compiled-executable cache. The cache is keyed by program
-    kind + argument geometry and never evicts, so long-lived processes
-    sweeping many distinct population shapes (benchmarks, shape sweeps)
-    can use this to bound memory — and to force a cold
-    ``compile_time_s`` measurement."""
-    _EXEC_CACHE.clear()
+    """Drop the default runtime's compiled-executable cache. The cache
+    is keyed by program kind + argument geometry and never evicts, so
+    long-lived processes sweeping many distinct population shapes
+    (benchmarks, shape sweeps) can use this to bound memory — and to
+    force a cold ``compile_time_s`` measurement."""
+    _DEFAULT_RUNTIME.clear()
 
 
 @dataclass
 class FleetGANReport:
-    """What one fleet prep did: population split, fused-program groups
-    (batch size -> cohort width), and the compile/steady-state timing
-    split."""
+    """What one fleet prep did: population split, the fused train
+    program's (batch bucket -> cohort width) group, and the
+    compile/steady-state timing split."""
     n_clients: int
     n_eligible: int
     n_synth: int = 0
@@ -82,67 +106,132 @@ class FleetGANReport:
     g_loss: Dict[int, float] = field(default_factory=dict)
 
 
-def _compiled(kind, build, args, record):
-    """AOT-compile ``build()`` for ``args``' shapes (cached), charging
-    wall-clock to ``record.compile_time_s`` only on a cache miss."""
-    key = (kind,) + tuple(
-        (tuple(l.shape), str(l.dtype)) for l in jax.tree.leaves(args))
-    if key not in _EXEC_CACHE:
-        t0 = time.perf_counter()
-        _EXEC_CACHE[key] = build().lower(*args).compile()
-        record.compile_time_s += time.perf_counter() - t0
-    return _EXEC_CACHE[key]
+def _keystream_build(steps):
+    return lambda ks: jax.vmap(
+        lambda r: gan_lib.gan_key_stream(r, steps))(ks)
 
 
-def _keystream_fn(steps):
-    return jax.jit(jax.vmap(lambda r: gan_lib.gan_key_stream(r, steps)))
+def _indices_build(batch):
+    return lambda kb, n: jax.vmap(
+        lambda k, m: gan_lib.gan_batch_indices(k, m, batch))(kb, n)
 
 
-def _indices_fn(batch):
-    return jax.jit(jax.vmap(
-        lambda kb, n: gan_lib.gan_batch_indices(kb, n, batch)))
+def _zstream_build(batch, z_dim):
+    return lambda ks: jax.vmap(
+        lambda k: gan_lib.gan_z_stream(k, batch, z_dim))(ks)
 
 
-def _init_fn(cfg):
+def _init_build(cfg):
     def one(k0):
         params = gan_lib.init_gan(k0, cfg)
         opt = {"gen": optim.adam_init(params["gen"]),
                "disc": optim.adam_init(params["disc"])}
         return params, opt
-    return jax.jit(jax.vmap(one))
+
+    return lambda k0s: jax.vmap(one)(k0s)
 
 
-def _train_fn(cfg):
-    def one(params, opt, imgs, labs, idx, kss, active):
-        return gan_lib.gan_scan(params, opt, cfg, imgs, labs, idx, kss,
-                                active=active)
-    return jax.jit(jax.vmap(one), donate_argnums=(0, 1))
+def _train_build(cfg):
+    def one(params, opt, imgs, labs, idx, z, z2, n_true, active):
+        return gan_lib.gan_scan_bucketed(
+            params, opt, cfg, imgs, labs, idx, z, z2, n_true,
+            active=active)
+
+    return lambda *a: jax.vmap(one)(*a)
 
 
-def _synth_fn(cfg):
-    return jax.jit(jax.vmap(
-        lambda gen, z, labs: gan_lib.generate(gen, cfg, z, labs)))
+def _synth_build(cfg):
+    return lambda gens, z, labs: jax.vmap(
+        lambda g, zz, ll: gan_lib.generate(g, cfg, zz, ll))(
+            gens, z, labs)
 
 
-def prepare_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
-                      conv_impl: str = "gemm") -> FleetGANReport:
-    """Train + synthesize every eligible client's GAN as stacked fused
-    programs and write ``gan_cfg``/``gan_params``/``aug_images``/
-    ``aug_labels`` back onto the clients — the fleet equivalent of
+@dataclass
+class FleetGANJob:
+    """A launched (possibly still-computing) fleet-GAN prep. ``need``
+    maps client position -> rebalancing labels (host-known at launch, so
+    the cohort engine can lay out padded pools before the synthesized
+    images exist); ``resolve()`` blocks on the device work, writes
+    ``gan_cfg``/``gan_params``/``aug_images``/``aug_labels`` back onto
+    the clients, and finalizes the report."""
+    report: FleetGANReport
+    need: Dict[int, np.ndarray]
+    _clients: Sequence = ()
+    _cfg: Optional[gan_lib.GANConfig] = None
+    _runtime: Optional[runtime_lib.ProgramRuntime] = None
+    _gan_snapshot: Tuple[int, float] = (0, 0.0)
+    _launch_wall_s: float = 0.0
+    _params: Optional[dict] = None          # stacked trained params
+    _ms: Optional[dict] = None              # stacked per-step metrics
+    _eligible: Sequence[bool] = ()
+    _synth: Sequence = ()                   # [(pos, need, synth row)]
+    _synth_handle: Optional[runtime_lib.Handle] = None
+    _resolved: bool = False
 
-        for i, c in enumerate(clients):
-            if c.n >= strategies.GAN_MIN_POOL:
-                c.prepare_gan(keys[i], steps=steps)
+    @property
+    def resolved(self) -> bool:
+        return self._resolved
 
-    ``keys[i]`` is client i's GAN key (the simulator passes
-    ``fold_in(rng, GAN_RNG_OFFSET + i)``). Ineligible clients ride the
-    smallest-batch group fully masked (bitwise no-op steps) and keep
-    their GAN fields unset. Returns a :class:`FleetGANReport`.
-    """
-    t_total = time.perf_counter()
-    rep = FleetGANReport(n_clients=len(clients), n_eligible=0)
-    if not clients:
+    def resolve(self) -> FleetGANReport:
+        if self._resolved:
+            return self.report
+        t0 = time.perf_counter()
+        rep = self.report
+        if self._params is not None:
+            d_l = np.asarray(self._ms["d_loss"])
+            g_l = np.asarray(self._ms["g_loss"])
+            for i, c in enumerate(self._clients):
+                if not self._eligible[i]:
+                    continue
+                c.gan_cfg = self._cfg
+                c.gan_params = jax.tree.map(lambda l: l[i], self._params)
+                rep.d_loss[i] = float(d_l[i, -1])
+                rep.g_loss[i] = float(g_l[i, -1])
+                nd = self.need[i]
+                if len(nd) == 0:
+                    c.aug_images = np.zeros(
+                        (0, *c.images.shape[1:]), np.float32)
+                    c.aug_labels = np.zeros((0,), np.int32)
+        if self._synth:
+            imgs = np.asarray(self._synth_handle.result(), np.float32)
+            for pos, nd, row in self._synth:
+                self._clients[pos].aug_images = imgs[row, :len(nd)]
+                self._clients[pos].aug_labels = nd
+                rep.n_synth += len(nd)
+        if self._runtime is not None:
+            n0, t0c = self._gan_snapshot
+            n1, t1c = self._runtime.subtotal("gan_")
+            rep.compile_time_s = t1c - t0c
+        rep.prep_time_s = (self._launch_wall_s +
+                           (time.perf_counter() - t0) -
+                           rep.compile_time_s)
+        # per-client results now live on the clients; drop the stacked
+        # fleet buffers (params + both Adam moment trees, per-step
+        # metrics, padded synth images) so they don't stay pinned on
+        # device for the rest of the run
+        self._params = self._ms = self._synth_handle = None
+        self._resolved = True
         return rep
+
+
+def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
+                     conv_impl: str = "gemm",
+                     runtime: Optional[runtime_lib.ProgramRuntime] = None
+                     ) -> FleetGANJob:
+    """Dispatch the whole fleet's GAN training + synthesis as two fused
+    programs through the shared runtime, without forcing a host sync —
+    the caller can stage other device work (CLIP pool encoding) while
+    the GANs train, then ``job.resolve()``. ``keys[i]`` is client i's
+    GAN key (the simulator passes ``fold_in(rng, GAN_RNG_OFFSET + i)``).
+    """
+    t_launch = time.perf_counter()
+    rt = runtime if runtime is not None else _DEFAULT_RUNTIME
+    rep = FleetGANReport(n_clients=len(clients), n_eligible=0)
+    job = FleetGANJob(report=rep, need={}, _clients=clients, _runtime=rt,
+                      _gan_snapshot=rt.subtotal("gan_"))
+    if not clients:
+        job._launch_wall_s = time.perf_counter() - t_launch
+        return job
     if len(keys) != len(clients):
         # jnp indexing clamps out-of-bounds rows, so a short keys list
         # would silently reuse the last key — break parity loudly
@@ -156,95 +245,127 @@ def prepare_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
         raise ValueError("fleet-GAN cohort contains empty clients — "
                          "drop them before GAN prep (simulator does)")
     cfg = gan_lib.GANConfig(n_classes=n_classes, conv_impl=conv_impl)
+    job._cfg = cfg
     eligible = [c.n >= strategies_lib.GAN_MIN_POOL for c in clients]
+    job._eligible = eligible
     rep.n_eligible = int(sum(eligible))
     if rep.n_eligible == 0:       # empty-after-filter: nothing to train
-        rep.prep_time_s = time.perf_counter() - t_total
-        return rep
+        job._launch_wall_s = time.perf_counter() - t_launch
+        return job
+    for i, c in enumerate(clients):
+        job.need[i] = gan_lib.rebalance_labels(c.labels, n_classes) \
+            if eligible[i] else np.zeros((0,), np.int32)
 
+    C = len(clients)
     # one dispatch: every client's full RNG stream (bitwise the
     # sequential split sequence)
     keys_arr = jnp.stack([jnp.asarray(k) for k in keys])
-    ks_exec = _compiled(("keys", steps), lambda: _keystream_fn(steps),
-                        (keys_arr,), rep)
-    k0s, kbs, kss = ks_exec(keys_arr)
+    k0s, kbs, kss = rt.compile(
+        "gan_keys", lambda: _keystream_build(steps), (keys_arr,),
+        static_key=(steps,))(keys_arr)
 
-    # group by GAN batch size (the one unpaddable shape); ineligible
-    # clients ride the smallest group, fully masked
-    groups: Dict[int, List[int]] = {}
-    for i, c in enumerate(clients):
+    # the one shared batch bucket: every client's minibatch pads to the
+    # cohort max; true batch sizes drive the in-program mean correction
+    n_b = np.asarray([strategies_lib.gan_batch_size(c.n)
+                      for c in clients], np.int32)
+    B = int(n_b[np.asarray(eligible)].max())
+    pool_i, pool_l, lens = stage_client_pools(
+        [(c.images, c.labels) for c in clients])
+
+    # per-distinct-batch-size pre-draws at the TRUE shape (threefry is
+    # not shape-stable), each group padded on its minibatch axis to the
+    # bucket, then assembled into the (C, steps, B[, z_dim]) stacks with
+    # one concatenate + row permutation. Ineligible clients' steps are
+    # fully masked no-ops, so their draws stay zero.
+    by_batch: Dict[int, List[int]] = {}
+    for i in range(C):
         if eligible[i]:
-            groups.setdefault(
-                strategies_lib.gan_batch_size(c.n), []).append(i)
-    small = min(groups)
-    for i, c in enumerate(clients):
-        if not eligible[i]:
-            groups[small].append(i)
-
-    stacked_gen: Dict[int, dict] = {}   # client pos -> generator params
-    for batch in sorted(groups):
-        pos = groups[batch]
+            by_batch.setdefault(int(n_b[i]), []).append(i)
+    parts_idx, parts_z, parts_z2, order = [], [], [], []
+    for batch, pos in sorted(by_batch.items()):
         pos_dev = jnp.asarray(pos)
-        pool_i, pool_l, lens = stage_client_pools(
-            [(clients[i].images, clients[i].labels) for i in pos])
-        iargs = (kbs[pos_dev], jnp.asarray(lens))
-        idx_exec = _compiled(("idx", batch),
-                             lambda: _indices_fn(batch), iargs, rep)
-        idx = idx_exec(*iargs)
-        k0s_g = k0s[pos_dev]
-        init_exec = _compiled(("init", cfg), lambda: _init_fn(cfg),
-                              (k0s_g,), rep)
-        params, opt = init_exec(k0s_g)
-        active = jnp.asarray(
-            np.repeat([[eligible[i]] for i in pos], steps, axis=1))
-        targs = (params, opt, jnp.asarray(pool_i), jnp.asarray(pool_l),
-                 idx, kss[pos_dev], active)
-        train_exec = _compiled(("train", cfg), lambda: _train_fn(cfg),
-                               targs, rep)
-        params, opt, ms = train_exec(*targs)
-        rep.groups.append((batch, len(pos)))
-        d_l, g_l = np.asarray(ms["d_loss"]), np.asarray(ms["g_loss"])
-        for j, i in enumerate(pos):
-            if eligible[i]:
-                stacked_gen[i] = jax.tree.map(lambda l: l[j], params)
-                rep.d_loss[i] = float(d_l[j, -1])
-                rep.g_loss[i] = float(g_l[j, -1])
+        iargs = (kbs[pos_dev], jnp.asarray(lens)[pos_dev])
+        idx_g = rt.compile("gan_idx", lambda: _indices_build(batch),
+                           iargs, static_key=(batch,))(*iargs)
+        zargs = (kss[pos_dev],)
+        z_g, z2_g = rt.compile(
+            "gan_z", lambda: _zstream_build(batch, cfg.z_dim), zargs,
+            static_key=(batch, cfg.z_dim))(*zargs)
+        bpad = ((0, 0), (0, 0), (0, B - batch))
+        parts_idx.append(jnp.pad(idx_g, bpad))
+        parts_z.append(jnp.pad(z_g, bpad + ((0, 0),)))
+        parts_z2.append(jnp.pad(z2_g, bpad + ((0, 0),)))
+        order.extend(pos)
+    inelig = [i for i in range(C) if not eligible[i]]
+    if inelig:
+        parts_idx.append(jnp.zeros((len(inelig), steps, B), jnp.int32))
+        parts_z.append(jnp.zeros((len(inelig), steps, B, cfg.z_dim)))
+        parts_z2.append(jnp.zeros((len(inelig), steps, B, cfg.z_dim)))
+        order.extend(inelig)
+    perm = jnp.asarray(np.argsort(np.asarray(order)))
+    idx_all = jnp.concatenate(parts_idx)[perm]
+    z_all = jnp.concatenate(parts_z)[perm]
+    z2_all = jnp.concatenate(parts_z2)[perm]
+
+    params, opt = rt.compile("gan_init", lambda: _init_build(cfg),
+                             (k0s,), static_key=(cfg,))(k0s)
+    active = jnp.asarray(np.repeat(
+        [[bool(e)] for e in eligible], steps, axis=1))
+    targs = (params, opt, jnp.asarray(pool_i), jnp.asarray(pool_l),
+             idx_all, z_all, z2_all, jnp.asarray(n_b), active)
+    params, opt, ms = rt.compile(
+        "gan_train", lambda: _train_build(cfg), targs,
+        static_key=(cfg,), donate_argnums=(0, 1))(*targs)
+    job._params, job._ms = params, ms
+    rep.groups.append((B, C))
 
     # synthesis: per-client z drawn eagerly at the exact sequential
     # shape (threefry draws are not prefix-stable under padding), then
-    # one stacked generate over the cohort
+    # one stacked generate over the cohort, row count bucketed to a
+    # power of two so nearby populations share the compile
     synth = []                     # (pos, need, z)
     for i, c in enumerate(clients):
-        if not eligible[i]:
+        if not eligible[i] or len(job.need[i]) == 0:
             continue
-        c.gan_cfg = cfg
-        c.gan_params = stacked_gen[i]
-        need = gan_lib.rebalance_labels(c.labels, n_classes)
-        if len(need) == 0:
-            c.aug_images = np.zeros((0, *c.images.shape[1:]), np.float32)
-            c.aug_labels = np.zeros((0,), np.int32)
-            continue
+        nd = job.need[i]
         z = jax.random.normal(jax.random.fold_in(keys_arr[i], 1),
-                              (len(need), cfg.z_dim))
-        synth.append((i, need, z))
+                              (len(nd), cfg.z_dim))
+        synth.append((i, nd, z))
     if synth:
-        M = max(len(need) for _, need, _ in synth)
+        M = runtime_lib.pow2_ceil(max(len(nd) for _, nd, _ in synth))
         z_pad = jnp.stack([
             jnp.pad(z, ((0, M - z.shape[0]), (0, 0)))
             for _, _, z in synth])
         lab_pad = jnp.asarray(np.stack([
-            np.pad(need, (0, M - len(need))) for _, need, _ in synth]))
-        gens = jax.tree.map(
-            lambda *ls: jnp.stack(ls),
-            *[stacked_gen[i]["gen"] for i, _, _ in synth])
+            np.pad(nd, (0, M - len(nd))) for _, nd, _ in synth]))
+        rows = jnp.asarray([i for i, _, _ in synth])
+        gens = jax.tree.map(lambda l: l[rows], params["gen"])
         sargs = (gens, z_pad, lab_pad)
-        synth_exec = _compiled(("synth", cfg), lambda: _synth_fn(cfg),
-                               sargs, rep)
-        imgs = np.asarray(synth_exec(*sargs), np.float32)
-        for row, (i, need, _) in enumerate(synth):
-            clients[i].aug_images = imgs[row, :len(need)]
-            clients[i].aug_labels = need
-            rep.n_synth += len(need)
-    rep.prep_time_s = (time.perf_counter() - t_total
-                       ) - rep.compile_time_s
-    return rep
+        job._synth_handle = rt.dispatch(
+            "gan_synth", lambda: _synth_build(cfg), sargs,
+            static_key=(cfg,))
+        job._synth = [(i, nd, row) for row, (i, nd, _) in
+                      enumerate(synth)]
+    job._launch_wall_s = time.perf_counter() - t_launch
+    return job
+
+
+def prepare_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
+                      conv_impl: str = "gemm",
+                      runtime: Optional[runtime_lib.ProgramRuntime] =
+                      None) -> FleetGANReport:
+    """Train + synthesize every eligible client's GAN as stacked fused
+    programs and write ``gan_cfg``/``gan_params``/``aug_images``/
+    ``aug_labels`` back onto the clients — the fleet equivalent of
+
+        for i, c in enumerate(clients):
+            if c.n >= strategies.GAN_MIN_POOL:
+                c.prepare_gan(keys[i], steps=steps)
+
+    Blocking composition of :func:`launch_gan_fleet` + ``resolve()``.
+    Ineligible clients ride the one bucketed program fully masked
+    (bitwise no-op steps) and keep their GAN fields unset. Returns a
+    :class:`FleetGANReport`."""
+    return launch_gan_fleet(clients, keys, steps=steps,
+                            conv_impl=conv_impl,
+                            runtime=runtime).resolve()

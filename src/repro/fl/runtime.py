@@ -1,0 +1,207 @@
+"""Bucketed program runtime: one compile cache under every fused engine.
+
+Every fused program in the FL stack — full/subset/wave cohort rounds
+(``fl.cohort``), the batch-index sampler, pool staging, and the
+fleet-GAN train/synthesis programs (``fl.fleetgan``) — compiles and
+executes through one :class:`ProgramRuntime`. The runtime owns three
+things the engines used to re-implement ad hoc:
+
+**AOT compilation + accounting.** Programs are compiled ahead of time
+(``jax.jit(fn, donate_argnums=...).lower(*args).compile()``) and the
+resulting executables are cached by ``(kind, static config, donation
+signature, argument shapes/dtypes)`` and then *called directly*, so the
+executable cache is the execution path (no separate jit call-path cache
+to re-warm). Wall-clock spent compiling is charged per ``kind`` on cache
+misses only; ``stats()``/``n_compiles``/``compile_time_s`` give the
+unified breakdown that ``History.meta`` reports instead of the three
+ad-hoc timers the engines used to keep.
+
+**Shape bucketing.** A shape-diverse workload must not pay one compile
+per shape variant:
+
+- *Cohort widths* (:func:`bucket_width`): a subset round or async wave
+  over K of N clients runs at width ``B = min(N, max(4, next_pow2(K)))``
+  — padded rows gather a valid client's staged pool but carry **zero
+  aggregation weight** (the in-program FedAvg weight vector is
+  renormalized over the true selection with zeros in the pad tail), pad
+  batch indices are drawn *outside* the program at the true K (threefry
+  draws are not shape-stable, so padding must never touch the sample
+  stream) and zero-filled, and per-client metrics are sliced back to the
+  true K on the host. A participation sweep over K ∈ {2,…,N} therefore
+  compiles O(log N) programs instead of O(N), and padding never leaks
+  into sampling, aggregation, or uplink-byte accounting.
+- *Batch buckets with mean-correction* (``gan.train_step_bucketed``):
+  GAN minibatch losses are batch means, so the fleet engine pads every
+  client's minibatch to one shared bucket and computes **masked means**
+  (``sum(per_row * mask) / n_true`` — the batch-mean loss rescaled by
+  true-batch/padded-batch), which zeroes every padded row's gradient
+  contribution exactly; all batch-size groups then share one train
+  compile. Per-step noise is pre-drawn at the true batch shape
+  (``gan.gan_z_stream``) so the RNG stream stays bitwise the sequential
+  one.
+- *Row buckets* (:func:`bucket_rows`): chunked staging / synthesis row
+  counts pad to power-of-two buckets so ragged tails reuse a compile.
+
+**Non-blocking dispatch.** ``dispatch()`` returns a :class:`Handle`
+wrapping the executable's output arrays without forcing a host sync —
+under JAX's asynchronous dispatch the program runs while the caller
+stages other work; ``Handle.result()`` blocks and materializes. The
+fleet-GAN synthesis dispatch uses this directly, and
+``fleetgan.FleetGANJob`` (launch/resolve) is the engine-level form of
+the same pattern: the simulator launches GAN prep, the cohort engine
+stages the CLIP pools while those programs run, then resolves.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Cohort-width buckets below this floor are not worth separate programs:
+# a width-4 program over a width-2 selection wastes two masked rows of a
+# cheap round, while halving the number of compiles a K-sweep pays.
+MIN_COHORT_BUCKET = 4
+
+
+def pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    if n < 1:
+        raise ValueError(f"pow2_ceil needs n >= 1, got {n}")
+    return 1 << (int(n) - 1).bit_length()
+
+
+def bucket_width(k: int, n: int, *, min_bucket: int = MIN_COHORT_BUCKET
+                 ) -> int:
+    """Cohort-axis bucket for a selection of ``k`` out of ``n`` clients:
+    the next power of two (floored at ``min_bucket``), clamped to ``n``.
+    ``k == n`` always maps to ``n`` itself, so full-cohort selections
+    never pad — the K=N subset round stays bit-identical to the
+    gather-free full round."""
+    if not 1 <= k <= n:
+        raise ValueError(f"selection width {k} out of range for {n}")
+    if k >= n:
+        return n
+    return min(n, max(min_bucket, pow2_ceil(k)))
+
+
+def bucket_rows(n: int, cap: int) -> int:
+    """Row-count bucket for chunked row-wise programs (staging encode,
+    GAN synthesis): the next power of two, clamped to ``cap``."""
+    if n < 1:
+        raise ValueError(f"bucket_rows needs n >= 1, got {n}")
+    return min(int(cap), pow2_ceil(n))
+
+
+def pad_leading(arr, width: int, fill=0):
+    """Zero-(or ``fill``-)pad ``arr`` along axis 0 to ``width`` rows."""
+    n = arr.shape[0]
+    if n == width:
+        return arr
+    if n > width:
+        raise ValueError(f"cannot pad {n} rows down to {width}")
+    pad = jnp.full((width - n,) + tuple(arr.shape[1:]), fill, arr.dtype)
+    return jnp.concatenate([arr, pad])
+
+
+class Handle:
+    """Non-blocking view of a dispatched program's outputs. The wrapped
+    arrays are live as soon as the dispatch returns (JAX async dispatch);
+    ``result()`` blocks until the computation finishes and returns the
+    output tree. Purely structural on synchronous backends (CPU)."""
+
+    def __init__(self, out):
+        self._out = out
+
+    def result(self):
+        jax.block_until_ready(jax.tree.leaves(self._out))
+        return self._out
+
+    @property
+    def out(self):
+        """The (possibly still-computing) output tree."""
+        return self._out
+
+
+class ProgramRuntime:
+    """One AOT-compile cache + accounting ledger for a family of fused
+    programs. Engines share a runtime (the simulator builds one per run
+    and threads it through the cohort engine and the fleet-GAN engine)
+    so ``History.meta`` reports a single unified compile breakdown, and
+    identical programs built by different engines (e.g. a benchmark
+    sweeping cohort widths over one staged population) share compiles.
+    """
+
+    def __init__(self):
+        self._exes: Dict[Tuple, Any] = {}
+        self._kinds: Dict[str, Dict[str, float]] = {}
+
+    # -- cache ---------------------------------------------------------
+    @staticmethod
+    def _sig(args) -> Tuple:
+        return tuple(
+            (tuple(getattr(l, "shape", ())),
+             str(getattr(l, "dtype", type(l).__name__)))
+            for l in jax.tree.leaves(args))
+
+    def compile(self, kind: str, build: Callable[[], Callable], args,
+                *, static_key: Tuple = (),
+                donate_argnums: Sequence[int] = ()):
+        """Return the compiled executable for ``build()`` at ``args``'
+        shapes, compiling (and charging wall-clock to ``kind``) only on a
+        cache miss. ``static_key`` must capture everything the program
+        closes over that is not visible in the argument shapes."""
+        donate = tuple(donate_argnums)
+        key = (kind, static_key, donate, self._sig(args))
+        exe = self._exes.get(key)
+        if exe is None:
+            t0 = time.perf_counter()
+            exe = jax.jit(build(), donate_argnums=donate) \
+                .lower(*args).compile()
+            dt = time.perf_counter() - t0
+            self._exes[key] = exe
+            k = self._kinds.setdefault(
+                kind, {"n_compiles": 0, "compile_time_s": 0.0})
+            k["n_compiles"] += 1
+            k["compile_time_s"] += dt
+        return exe
+
+    def run(self, kind: str, build, args, **kw):
+        """Compile-or-hit, then execute synchronously-dispatched."""
+        return self.compile(kind, build, args, **kw)(*args)
+
+    def dispatch(self, kind: str, build, args, **kw) -> Handle:
+        """Compile-or-hit, then execute without forcing a host sync."""
+        return Handle(self.compile(kind, build, args, **kw)(*args))
+
+    def clear(self):
+        """Drop every cached executable and reset the accounting — used
+        by long-lived shape sweeps to bound memory and by benchmarks to
+        force a cold compile measurement."""
+        self._exes.clear()
+        self._kinds.clear()
+
+    # -- accounting ----------------------------------------------------
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-kind ``{"n_compiles", "compile_time_s"}`` breakdown."""
+        return {k: dict(v) for k, v in self._kinds.items()}
+
+    @property
+    def n_compiles(self) -> int:
+        return sum(int(v["n_compiles"]) for v in self._kinds.values())
+
+    @property
+    def compile_time_s(self) -> float:
+        return sum(v["compile_time_s"] for v in self._kinds.values())
+
+    def subtotal(self, prefix: str) -> Tuple[int, float]:
+        """(n_compiles, compile_time_s) summed over kinds matching
+        ``prefix`` — e.g. ``subtotal("gan_")`` for the GAN engine's share
+        of the one cache."""
+        n, t = 0, 0.0
+        for k, v in self._kinds.items():
+            if k.startswith(prefix):
+                n += int(v["n_compiles"])
+                t += v["compile_time_s"]
+        return n, t

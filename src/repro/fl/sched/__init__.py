@@ -30,8 +30,9 @@ Policies:
  - ``sync-partial`` (``SyncPartialScheduler``) — K of N clients per
    round, sampled uniformly or availability-trace-weighted, run as one
    fused subset round: the engine gathers the selected rows of the
-   already-device-staged padded pools (no re-upload), at fixed cohort
-   width K (one compile per K).
+   already-device-staged padded pools (no re-upload) at the
+   power-of-two-bucketed cohort width (``fl.runtime.bucket_width`` —
+   one compile per bucket, pad rows carry zero aggregation weight).
  - ``async`` (``AsyncBufferedScheduler``) — FedBuff-style buffered
    asynchrony on a deterministic virtual clock (``events.EventQueue``):
    trace-driven finish times, fused cohort *waves* per dispatch batch,

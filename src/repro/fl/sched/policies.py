@@ -256,11 +256,13 @@ class Scheduler:
         advancing any scheduler state. Called once before timing starts
         so ``History.round_time_s`` is steady-state.
 
-        Warmup *executes* one throwaway round per program rather than
-        AOT-lowering: on this jax, ``jit(f).lower(...).compile()`` does
-        not populate the call-path cache, so the first real round would
-        recompile anyway. The discarded execution is compile-dominated
-        for every config this repo runs."""
+        The engine compiles through the shared program runtime
+        (``fl.runtime``): AOT executables are the execution path, so one
+        throwaway round per program both populates the cache that real
+        rounds call into and charges the compile wall-clock to the
+        runtime's per-kind ledger. A sync-partial policy warms its
+        cohort-width *bucket* — every K in the same power-of-two bucket
+        reuses the warmed program."""
         raise NotImplementedError
 
 

@@ -22,6 +22,14 @@ selects full-sync (every client, the degenerate policy), sync-partial
 (K of N per round, availability-weighted), or async FedBuff-style
 buffered aggregation with staleness-discounted weights on a virtual
 clock. ``run_federated`` has exactly one round path — ``Scheduler.step``.
+
+Every fused program (rounds, staging, sampling, fleet-GAN) compiles
+through one bucketed program runtime per run (``fl.runtime``;
+pass ``runtime=`` to share a cache across runs in a sweep), fleet-GAN
+prep overlaps CLIP pool staging (non-blocking ``launch_gan_fleet``
+resolved inside the cohort engine), and ``History.meta`` reports the
+runtime's unified compile ledger: ``n_compiles``,
+``n_compiles_by_kind``, ``compile_time_s``, and the ``gan_*`` share.
 """
 from __future__ import annotations
 
@@ -42,6 +50,7 @@ from repro.fl import client as client_lib
 from repro.fl import cohort as cohort_lib
 from repro.fl import fleetgan
 from repro.fl import partition, server
+from repro.fl import runtime as runtime_lib
 from repro.fl import sched as sched_lib
 from repro.fl import strategies as strategies_lib
 from repro.fl.strategies import STRATEGIES, Strategy
@@ -184,7 +193,7 @@ def _server_eval(frozen, trainable, ccfg, class_emb, eval_set, batch=128):
             float(tail_hit) / max(float(tail_n), 1.0))
 
 
-def run_federated(cfg: FLConfig) -> History:
+def run_federated(cfg: FLConfig, *, runtime=None) -> History:
     strat = STRATEGIES[cfg.strategy]
     rng = jax.random.PRNGKey(cfg.seed)
     data = make_dataset(cfg.dataset, n_per_class=cfg.n_per_class,
@@ -229,7 +238,15 @@ def run_federated(cfg: FLConfig) -> History:
                                     seed=cfg.seed)
     for i, c in enumerate(clients):
         c.step_mult = int(trace.step_mult[i])
+    # one program runtime per run (unless the caller shares one across
+    # runs — shape sweeps then share compiles): every fused program of
+    # the cohort and fleet-GAN engines compiles through it, and meta
+    # reports its unified n_compiles/compile-time breakdown
+    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime()
+
     gan_meta: Dict[str, Any] = {}
+    gan_job = None
+    gan_rep = None
     if strat.use_gan:
         # both executors consume identical per-client RNG streams, so
         # the sequential loop is the fleet engine's parity oracle
@@ -238,16 +255,15 @@ def run_federated(cfg: FLConfig) -> History:
             for i in range(len(clients))]
         t0 = time.time()
         if cfg.gan_engine == "fleet":
-            rep = fleetgan.prepare_gan_fleet(clients, gan_keys,
-                                             steps=cfg.gan_steps)
-            gan_meta = {
-                "gan_engine": "fleet",
-                "gan_eligible": rep.n_eligible,
-                "gan_synth": rep.n_synth,
-                "gan_groups": [list(g) for g in rep.groups],
-                "gan_prep_time_s": rep.prep_time_s,
-                "gan_compile_time_s": rep.compile_time_s,
-            }
+            if cfg.engine == "cohort":
+                # non-blocking launch: the GAN programs run while the
+                # cohort engine stages the CLIP pools below; the engine
+                # resolves the job into the staged features
+                gan_job = fleetgan.launch_gan_fleet(
+                    clients, gan_keys, steps=cfg.gan_steps, runtime=rt)
+            else:
+                gan_rep = fleetgan.prepare_gan_fleet(
+                    clients, gan_keys, steps=cfg.gan_steps, runtime=rt)
         elif cfg.gan_engine == "sequential":
             n_el = 0
             for i, c in enumerate(clients):
@@ -262,6 +278,35 @@ def run_federated(cfg: FLConfig) -> History:
 
     global_tr = client_lib.init_trainable(
         jax.random.fold_in(rng, 2), ccfg, strat)
+
+    if cfg.engine == "cohort":
+        engine = cohort_lib.CohortEngine(
+            frozen=frozen, ccfg=ccfg, class_emb=class_emb,
+            clients=clients,
+            cfg=cohort_lib.CohortConfig(
+                strategy=strat, local_steps=cfg.local_steps,
+                batch_size=cfg.batch_size, lr=cfg.lr),
+            runtime=rt, gan_job=gan_job)
+        executor = sched_lib.CohortExec(engine)
+        if gan_job is not None:
+            gan_rep = gan_job.report       # resolved by the engine
+    elif cfg.engine == "sequential":
+        executor = sched_lib.SequentialExec(
+            clients=clients, frozen=frozen, ccfg=ccfg,
+            class_emb=class_emb, local_steps=cfg.local_steps,
+            batch_size=cfg.batch_size, lr=cfg.lr)
+    else:
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+
+    if gan_rep is not None:
+        gan_meta = {
+            "gan_engine": "fleet",
+            "gan_eligible": gan_rep.n_eligible,
+            "gan_synth": gan_rep.n_synth,
+            "gan_groups": [list(g) for g in gan_rep.groups],
+            "gan_prep_time_s": gan_rep.prep_time_s,
+            "gan_compile_time_s": gan_rep.compile_time_s,
+        }
 
     trainable_params = sum(l.size for l in jax.tree.leaves(global_tr))
     frozen_params = sum(
@@ -287,22 +332,6 @@ def run_federated(cfg: FLConfig) -> History:
         **gan_meta,
     })
 
-    if cfg.engine == "cohort":
-        engine = cohort_lib.CohortEngine(
-            frozen=frozen, ccfg=ccfg, class_emb=class_emb,
-            clients=clients,
-            cfg=cohort_lib.CohortConfig(
-                strategy=strat, local_steps=cfg.local_steps,
-                batch_size=cfg.batch_size, lr=cfg.lr))
-        executor = sched_lib.CohortExec(engine)
-    elif cfg.engine == "sequential":
-        executor = sched_lib.SequentialExec(
-            clients=clients, frozen=frozen, ccfg=ccfg,
-            class_emb=class_emb, local_steps=cfg.local_steps,
-            batch_size=cfg.batch_size, lr=cfg.lr)
-    else:
-        raise ValueError(f"unknown engine {cfg.engine!r}")
-
     # like the empty-shard drop above, clamp the cohort width to the
     # clients that actually survived partitioning; meta records the
     # effective K (sched.k). 'full' ignores K, so it sees the raw value
@@ -325,11 +354,24 @@ def run_federated(cfg: FLConfig) -> History:
     })
 
     # compile every fused program the policy dispatches before the clock
-    # starts, so round_time_s is steady-state and the one-time jit cost
-    # is reported separately (satellite of the PR 2 scheduler issue).
-    t0 = time.time()
+    # starts, so round_time_s is steady-state; the one-time compile cost
+    # is read back from the shared runtime's AOT ledger (one cache,
+    # per-kind breakdown) instead of ad-hoc wall-clock timers.
     sched.warmup(global_tr, jax.random.fold_in(rng, 4))
-    hist.meta["compile_time_s"] = time.time() - t0
+
+    def _compile_meta():
+        _, gan_t = rt.subtotal("gan_")
+        hist.meta["n_compiles"] = rt.n_compiles
+        hist.meta["n_compiles_by_kind"] = {
+            k: int(v["n_compiles"])
+            for k, v in sorted(rt.stats().items())}
+        # gan_meta already carries the fleet job's own
+        # gan_compile_time_s delta of the same ledger (strategy-flag
+        # plumbing keeps gan_* keys unset for non-GAN arms); everything
+        # else is round/staging/sampling cost
+        hist.meta["compile_time_s"] = rt.compile_time_s - gan_t
+
+    _compile_meta()
 
     cids = np.asarray([c.cid for c in clients])
     for rnd in range(cfg.rounds):
@@ -354,4 +396,8 @@ def run_federated(cfg: FLConfig) -> History:
             hist.server_acc.append(acc)
             hist.server_loss.append(loss)
             hist.tail_acc.append(tail)
+    # refresh the compile ledger: a policy that lazily compiled a new
+    # width bucket mid-run (async back-fill at a fresh width) must show
+    # up in the reported counts
+    _compile_meta()
     return hist

@@ -37,11 +37,22 @@ def _kernel(x_ref, q_ref, s_ref, *, bits):
                                              "interpret"))
 def blockwise_quant(x, *, bits=8, block=128, block_n=512,
                     interpret=False) -> QTensor:
-    """x: (K, N) -> QTensor with blocks of ``block`` along K."""
+    """x: (K, N) -> QTensor with blocks of ``block`` along K.
+
+    Both dims pad to their tile: N to ``block_n`` (sliced back below)
+    and K to a multiple of ``block`` with zero rows. Zero padding never
+    perturbs a block's absmax scale (real rows dominate; an all-pad
+    block hits the 1e-12 floor), so the result equals quantizing the
+    zero-padded input exactly. The returned ``q``/``scales`` cover the
+    padded K while ``orig_shape`` records the true K — ``dequantize``
+    yields ``ceil(K/block)*block`` rows (zeros past K); callers slice
+    ``[:K]``."""
     K, N = x.shape
     block = min(block, K)
-    assert K % block == 0, (K, block)
-    G = K // block
+    Kp = -(-K // block) * block
+    if Kp != K:
+        x = jnp.pad(x, ((0, Kp - K), (0, 0)))
+    G = Kp // block
     bn = min(block_n, N)
     Np = -(-N // bn) * bn
     xp = jnp.pad(x, ((0, 0), (0, Np - N))) if Np != N else x

@@ -56,12 +56,22 @@ def _kernel(x_ref, q_ref, s_ref, code_ref, o_ref, acc_ref, *, bits, mode,
                                              "interpret"))
 def quant_matmul(x, qt: QTensor, *, block_m=256, block_n=256,
                  interpret=False):
-    """x: (..., K) @ dequant(qt (K, N)) -> (..., N)."""
+    """x: (..., K) @ dequant(qt (K, N)) -> (..., N). ``qt`` may cover a
+    K zero-padded to a block multiple (the odd-K ``blockwise_quant``
+    contract); x zero-pads to match — the last block then contracts
+    defined zeros instead of out-of-bounds reads."""
     *lead, K = x.shape
     M = 1
     for s in lead:
         M *= s
     x2 = x.reshape(M, K)
+    Kq = qt.q.shape[0] * qt.block
+    if Kq != K:
+        if Kq < K or (Kq - K) >= qt.block:
+            raise ValueError(
+                f"quantized contraction dim {Kq} incompatible with "
+                f"x's {K} (block {qt.block})")
+        x2 = jnp.pad(x2, ((0, 0), (0, Kq - K)))
     G = qt.q.shape[0]
     N = qt.q.shape[-1]
     block = qt.block

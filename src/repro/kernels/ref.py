@@ -9,6 +9,7 @@ itself blocked) so that 32k-sequence dry-runs never materialize S×S scores.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -153,8 +154,19 @@ def selective_scan(dt, x, Bm, Cm, A, h0=None):
 # fused dequant-matmul (QLoRA backbone hot path)
 # ------------------------------------------------------------------
 def quant_matmul(x: jax.Array, qt: qlib.QTensor) -> jax.Array:
-    """x: (..., K) @ dequant(qt): (K, N) -> (..., N)."""
+    """x: (..., K) @ dequant(qt): (K, N) -> (..., N).
+
+    ``qt`` may cover a K zero-padded to a block multiple (the odd-K
+    ``blockwise_quant`` contract); x's contraction dim zero-pads to
+    match, which contracts exactly like slicing the pad rows off."""
     w = qlib.dequantize(qt, x.dtype)
+    Kq, K = w.shape[0], x.shape[-1]
+    if Kq != K:
+        if Kq < K or (Kq - K) >= qt.block:
+            raise ValueError(
+                f"quantized contraction dim {Kq} incompatible with "
+                f"x's {K} (block {qt.block})")
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, Kq - K)])
     return jnp.einsum("...k,kn->...n", x, w)
 
 
@@ -163,4 +175,17 @@ def quant_matmul(x: jax.Array, qt: qlib.QTensor) -> jax.Array:
 # ------------------------------------------------------------------
 def blockwise_quant(x: jax.Array, *, bits: int = 8, block: int = 128,
                     mode: str = "linear") -> qlib.QTensor:
-    return qlib.quantize(x, bits=bits, block=block, mode=mode)
+    """Same contract as the Pallas kernel, including odd K: a
+    contraction dim not divisible by the block zero-pads up to the next
+    block multiple (pad rows never perturb a block's absmax scale), the
+    payload covers the padded K, and ``orig_shape`` records the true
+    shape — callers slice dequantized rows ``[:K]``."""
+    *lead, K, N = x.shape
+    blk = min(block, K)
+    Kp = -(-K // blk) * blk
+    if Kp == K:
+        return qlib.quantize(x, bits=bits, block=block, mode=mode)
+    pad = [(0, 0)] * len(lead) + [(0, Kp - K), (0, 0)]
+    qt = qlib.quantize(jnp.pad(x, pad), bits=bits, block=block,
+                       mode=mode)
+    return dataclasses.replace(qt, orig_shape=tuple(x.shape))

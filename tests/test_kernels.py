@@ -78,6 +78,53 @@ def test_blockwise_quant_vs_ref(bits, K, N, block, rng):
                                np.asarray(got.scales), rtol=1e-6)
 
 
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("K,N,block", [(130, 33, 64), (190, 40, 128),
+                                       (70, 20, 64)])
+def test_blockwise_quant_odd_K_pads_contraction_dim(bits, K, N, block,
+                                                    rng):
+    """K not divisible by the block must zero-pad the contraction dim
+    (like N already pads to block_n) instead of asserting: the result
+    equals the reference on the zero-padded input exactly — pad rows
+    never perturb a block's absmax scale — and dequantizes back to the
+    original values (zeros past K)."""
+    x = jnp.asarray(rng.randn(K, N), jnp.float32)
+    got = blockwise_quant(x, bits=bits, block=block, block_n=32,
+                          interpret=True)
+    blk = min(block, K)
+    Kp = -(-K // blk) * blk
+    xp = jnp.pad(x, ((0, Kp - K), (0, 0)))
+    want = ref.blockwise_quant(xp, bits=bits, block=block)
+    assert got.orig_shape == (K, N)
+    # the jnp fallback path (ops.blockwise_quant without Pallas) shares
+    # the pad contract: odd K works and matches quantizing padded input
+    ref_odd = ref.blockwise_quant(x, bits=bits, block=block)
+    assert ref_odd.orig_shape == (K, N)
+    assert (np.asarray(ref_odd.q) == np.asarray(want.q)).all()
+    np.testing.assert_allclose(np.asarray(ref_odd.scales),
+                               np.asarray(want.scales), rtol=1e-6)
+    assert (np.asarray(want.q) == np.asarray(got.q)).all()
+    np.testing.assert_allclose(np.asarray(want.scales),
+                               np.asarray(got.scales), rtol=1e-6)
+    deq = np.asarray(qlib.dequantize(got))
+    assert deq.shape == (Kp, N)
+    np.testing.assert_array_equal(deq[K:], 0)
+    scale_bound = np.asarray(want.scales).max()
+    np.testing.assert_allclose(deq[:K], np.asarray(x),
+                               atol=1.2 * scale_bound)
+    # both matmul consumers accept the padded-K payload: x's
+    # contraction dim pads with zeros (contracts exactly like slicing)
+    xin = jnp.asarray(rng.randn(3, K), jnp.float32)
+    want_mm = np.asarray(xin) @ deq[:K]
+    np.testing.assert_allclose(np.asarray(ref.quant_matmul(xin, got)),
+                               want_mm, atol=1e-4, rtol=1e-5)
+    got_mm = quant_matmul(xin, got, block_m=8, block_n=32,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(got_mm), want_mm,
+                               atol=1e-3 * max(1.0, np.abs(
+                                   want_mm).max()))
+
+
 def test_decode_attention_matches_flash_last_token(rng):
     """decode against a fully-valid cache == last row of full attention."""
     B, S, H, Hkv, D = 2, 32, 4, 2, 16

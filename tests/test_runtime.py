@@ -1,0 +1,237 @@
+"""Bucketed program runtime (fl.runtime): compile-count regressions
+(one cache entry per shape bucket, not per shape), the GAN batch
+mean-correction contract, and the bucket arithmetic itself.
+
+The compile-count tests are the guard the tentpole exists for: a
+participation sweep over many cohort widths K must compile one fused
+round per power-of-two bucket (O(log N), not O(N)), and a fleet-GAN
+cohort with several distinct batch-size groups must compile exactly one
+train and one synthesis program. A regression here means someone
+reintroduced a per-shape compile.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clip as clip_lib
+from repro.core import gan as gan_lib
+from repro.core import optim
+from repro.data.synthetic import class_tokens, make_dataset
+from repro.fl import client as client_lib
+from repro.fl import cohort as cohort_lib
+from repro.fl import fleetgan
+from repro.fl import runtime as runtime_lib
+from repro.fl.strategies import STRATEGIES
+
+STEPS, BATCH, LR = 2, 8, 3e-3
+
+
+# -- bucket arithmetic -------------------------------------------------
+
+def test_bucket_width_powers_of_two_clamped():
+    # K=N never pads (keeps the full-sync round gather-exact) ...
+    for n in (1, 2, 3, 5, 8, 13):
+        assert runtime_lib.bucket_width(n, n) == n
+    # ... smaller selections round up to pow2 with a floor of 4,
+    # clamped to N
+    assert runtime_lib.bucket_width(2, 16) == 4
+    assert runtime_lib.bucket_width(3, 16) == 4
+    assert runtime_lib.bucket_width(5, 16) == 8
+    assert runtime_lib.bucket_width(9, 16) == 16
+    assert runtime_lib.bucket_width(2, 3) == 3      # clamp beats floor
+    with pytest.raises(ValueError):
+        runtime_lib.bucket_width(0, 4)
+    with pytest.raises(ValueError):
+        runtime_lib.bucket_width(5, 4)
+
+
+def test_bucket_rows_and_pad_leading():
+    assert runtime_lib.bucket_rows(3, 512) == 4
+    assert runtime_lib.bucket_rows(512, 512) == 512
+    assert runtime_lib.bucket_rows(600, 512) == 512
+    a = jnp.arange(6).reshape(3, 2)
+    p = runtime_lib.pad_leading(a, 5)
+    assert p.shape == (5, 2)
+    np.testing.assert_array_equal(np.asarray(p[:3]), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(p[3:]), 0)
+    with pytest.raises(ValueError):
+        runtime_lib.pad_leading(a, 2)
+
+
+def test_runtime_cache_and_accounting():
+    rt = runtime_lib.ProgramRuntime()
+    build = lambda: (lambda x: x * 2.0)
+    a = jnp.ones((4,))
+    out = rt.run("double", build, (a,))
+    np.testing.assert_array_equal(np.asarray(out), 2.0)
+    rt.run("double", build, (jnp.zeros((4,)),))     # same shape: hit
+    assert rt.n_compiles == 1 and rt.compile_time_s > 0
+    rt.run("double", build, (jnp.ones((8,)),))      # new shape: miss
+    assert rt.stats()["double"]["n_compiles"] == 2
+    h = rt.dispatch("double", build, (a,))
+    np.testing.assert_array_equal(np.asarray(h.result()), 2.0)
+    rt.clear()
+    assert rt.n_compiles == 0 and rt.stats() == {}
+
+
+# -- compile-count regression: cohort width buckets --------------------
+
+def _mk_engine(runtime, sizes, arm="fedclip"):
+    strat = STRATEGIES[arm]
+    ccfg = clip_lib.CLIPConfig()
+    frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+    data = make_dataset("pacs", n_per_class=12, seed=0,
+                        longtail_gamma=4.0)
+    spec = data["spec"]
+    class_emb = clip_lib.text_embedding(
+        frozen, ccfg,
+        jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+    assert sum(sizes) <= len(data["labels"])
+    clients, start = [], 0
+    for i, n in enumerate(sizes):
+        sl = slice(start, start + n)
+        start += n
+        clients.append(client_lib.Client(
+            cid=i, images=data["images"][sl], labels=data["labels"][sl],
+            n_classes=spec.n_classes, strategy=strat))
+    engine = cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(strategy=strat, local_steps=STEPS,
+                                    batch_size=BATCH, lr=LR,
+                                    donate=False),
+        runtime=runtime)
+    tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg, strat)
+    return engine, tr
+
+
+def test_subset_round_compiles_one_program_per_bucket():
+    """A sweep over 4 distinct cohort widths K ∈ {2,3,5,8} on N=9 must
+    compile at most 2 subset-round programs (buckets {4, 8}), and
+    padding must never leak into metrics or uplink accounting."""
+    rt = runtime_lib.ProgramRuntime()
+    engine, tr = _mk_engine(rt, (10, 10, 10, 10, 8, 8, 8, 6, 6))
+    per_client = engine.per_client_uplink_bytes(tr)
+    rs = np.random.RandomState(0)
+    for k in (2, 3, 5, 8):
+        sel = rs.choice(engine.n_clients, k, replace=False)
+        _, m = engine.run_subset_round(tr, sel, jax.random.PRNGKey(k))
+        assert len(m["loss"]) == k and len(m["acc"]) == k
+        assert int(m["uplink_bytes"]) == k * per_client
+        assert sorted(m["sel"]) == sorted(int(s) for s in sel)
+    stats = rt.stats()
+    assert stats["subset_round"]["n_compiles"] <= 2, stats
+    # the tiny index sampler is still per-width (it feeds the true-K
+    # draw), but the expensive round program is bucketed
+    assert stats["sample_idx"]["n_compiles"] == 4
+    # a second sweep over the same widths is all cache hits
+    n_before = rt.n_compiles
+    for k in (2, 3, 5, 8):
+        sel = rs.choice(engine.n_clients, k, replace=False)
+        engine.run_subset_round(tr, sel, jax.random.PRNGKey(100 + k))
+    assert rt.n_compiles == n_before
+
+
+def test_wave_round_shares_width_buckets():
+    """Async wave widths in one bucket share a compile with each other
+    (but not with the aggregate-in-program subset round)."""
+    rt = runtime_lib.ProgramRuntime()
+    engine, tr = _mk_engine(rt, (10, 10, 10, 10, 8, 8, 8, 6, 6))
+    for k in (2, 3, 4):        # all bucket to width 4
+        delta, m = engine.run_wave(tr, np.arange(k),
+                                   jax.random.PRNGKey(k))
+        assert len(m["loss"]) == k
+        sliced = cohort_lib.slice_client_delta(delta, k - 1)
+        assert all(np.all(np.isfinite(np.asarray(l)))
+                   for l in jax.tree.leaves(sliced))
+    assert rt.stats()["wave_round"]["n_compiles"] == 1
+
+
+# -- compile-count regression: fleet-GAN batch bucket ------------------
+
+def test_fleet_gan_skewed_cohort_compiles_one_train_one_synth():
+    """A cohort with >= 2 distinct GAN batch-size groups (40 -> b40,
+    21 -> b21, 5 -> ineligible rider) must share ONE bucketed train
+    program and ONE synthesis program — the mean-correction contract is
+    what makes the shared compile legal."""
+    strat = STRATEGIES["tripleplay"]
+    data = make_dataset("pacs", n_per_class=30, seed=0,
+                        longtail_gamma=4.0)
+    spec = data["spec"]
+    clients, start = [], 0
+    for i, n in enumerate((40, 21, 5)):
+        sl = slice(start, start + n)
+        start += n
+        clients.append(client_lib.Client(
+            cid=i, images=data["images"][sl], labels=data["labels"][sl],
+            n_classes=spec.n_classes, strategy=strat))
+    rt = runtime_lib.ProgramRuntime()
+    rep = fleetgan.prepare_gan_fleet(
+        clients, [jax.random.PRNGKey(100 + i) for i in range(3)],
+        steps=4, runtime=rt)
+    stats = rt.stats()
+    assert stats["gan_train"]["n_compiles"] == 1, stats
+    assert stats["gan_synth"]["n_compiles"] == 1, stats
+    assert rep.groups == [(40, 3)]        # one bucket, whole cohort
+    assert rep.n_eligible == 2
+    assert rep.compile_time_s > 0
+    # the pre-draws stay per-true-batch-size (threefry shape
+    # stability), two distinct sizes -> two tiny programs each
+    assert stats["gan_idx"]["n_compiles"] == 2
+    assert stats["gan_z"]["n_compiles"] == 2
+
+
+# -- mean-correction property (hypothesis) -----------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 10), st.integers(0, 12), st.integers(0, 10 ** 6))
+def test_mean_corrected_padded_step_matches_unpadded(n, pad, seed):
+    """A GAN step on a batch padded to an arbitrary bucket must match
+    the unpadded step bit-tight: params AND both Adam states (moments
+    and step counters), with the per-step noise pre-drawn at the true
+    batch shape. This is the contract that lets every batch-size group
+    share one compile."""
+    cfg = gan_lib.GANConfig(n_classes=3, g_dim=8, d_dim=8, z_dim=8,
+                            conv_impl="gemm")
+    rs = np.random.RandomState(seed)
+    imgs = jnp.asarray(rs.randn(n, 32, 32, 3).astype(np.float32))
+    labs = jnp.asarray(rs.randint(0, 3, n).astype(np.int32))
+    rng = jax.random.PRNGKey(seed)
+    params = gan_lib.init_gan(jax.random.fold_in(rng, 0), cfg)
+    opt = {"gen": optim.adam_init(params["gen"]),
+           "disc": optim.adam_init(params["disc"])}
+    step_key = jax.random.fold_in(rng, 1)
+
+    # reference: the sequential step draws its noise in-program
+    ref_p, ref_o, ref_m = jax.jit(
+        lambda p, o: gan_lib.train_step_impl(p, o, (imgs, labs), cfg,
+                                             step_key))(params, opt)
+
+    # bucketed: same noise pre-drawn at the TRUE shape, batch padded
+    kz, kz2 = jax.random.split(step_key)
+    z = jax.random.normal(kz, (n, cfg.z_dim))
+    z2 = jax.random.normal(kz2, (n, cfg.z_dim))
+    B = n + pad
+    pad_rows = lambda a: jnp.pad(
+        a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+    got_p, got_o, got_m = jax.jit(
+        lambda p, o: gan_lib.train_step_bucketed(
+            p, o, (pad_rows(imgs), pad_rows(labs)), cfg, pad_rows(z),
+            pad_rows(z2), jnp.asarray(n)))(params, opt)
+
+    np.testing.assert_allclose(float(got_m["d_loss"]),
+                               float(ref_m["d_loss"]), atol=1e-5)
+    np.testing.assert_allclose(float(got_m["g_loss"]),
+                               float(ref_m["g_loss"]), atol=1e-5)
+    for (path, a), b in zip(
+            jax.tree_util.tree_leaves_with_path((ref_p, ref_o)),
+            jax.tree.leaves((got_p, got_o))):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype.kind == "i":      # Adam step counters: exact
+            np.testing.assert_array_equal(
+                a, b, err_msg=jax.tree_util.keystr(path))
+        else:
+            np.testing.assert_allclose(
+                a, b, atol=1e-5, rtol=0,
+                err_msg=jax.tree_util.keystr(path))
