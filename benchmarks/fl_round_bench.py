@@ -34,6 +34,14 @@ and the fleet-GAN ``gan_*`` program count (one train + one synthesis
 whatever the batch-size split) — so ``BENCH_fl_round.json`` tracks the
 fixed-cost drop alongside the steady-state speedups.
 
+A fourth comparison (``chaos_points``) runs the full simulator under
+fault injection (``fl.sched.chaos``: deterministic dropouts,
+device-class stragglers, lost uplinks) on one shared diurnal trace and
+records, for sync-partial vs async-buffered, the wall-clock round
+time, the final virtual-clock time (where the policies actually
+diverge — a sync barrier pays every straggler, the async buffer does
+not), the final tail accuracy, and the fault ledger.
+
 REPRO_BENCH_SCALE=quick (default) times 3 rounds per point; =paper 10.
 """
 from __future__ import annotations
@@ -294,6 +302,42 @@ def main():
                   f"subset={sub*1e3:7.1f} ms  "
                   f"uplink={uplink/2**20:6.2f} MiB  "
                   f"round_compiles={point['n_round_compiles_cum']}")
+    # chaos: sync-partial vs async under one fault schedule + diurnal
+    # trace — same population, same seed, same ChaosConfig; the ledger
+    # shows both policies absorbing the same fault pressure while the
+    # virtual clock shows what each policy pays for it
+    from repro.fl.sched import ChaosConfig
+    from repro.fl.simulator import FLConfig, run_federated
+
+    chaos = ChaosConfig(dropout_prob=0.25, straggler_sigma=0.5,
+                        uplink_loss_prob=0.1)
+    # 6 rounds minimum: faults are drawn per (round, client) at the
+    # population shape but only fire for selected participants — too
+    # few K=3 rounds can miss every faulted (round, client) pair and
+    # record a legitimately-empty ledger, which reads like chaos was
+    # silently off
+    cbase = dict(dataset="pacs", strategy="fedclip", n_clients=8,
+                 rounds=max(ROUNDS, 6), local_steps=LOCAL_STEPS,
+                 n_per_class=24, batch_size=BATCH, lr=LR,
+                 trace="diurnal", chaos=chaos, clients_per_round=3)
+    results["chaos_points"] = []
+    for policy in ("sync-partial", "async"):
+        t0 = time.perf_counter()
+        h = run_federated(FLConfig(**cbase, participation=policy))
+        wall = time.perf_counter() - t0
+        point = {"policy": policy,
+                 "rounds": len(h.rounds),
+                 "round_time_s": wall / max(len(h.rounds), 1),
+                 "vtime_final": float(h.vtime[-1]),
+                 "tail_acc_final": float(h.tail_acc[-1]),
+                 "server_acc_final": float(h.server_acc[-1]),
+                 "uplink_bytes": int(sum(h.uplink_bytes)),
+                 "fault_ledger": h.meta["fault_ledger"]}
+        results["chaos_points"].append(point)
+        print(f"chaos {policy:13s} round={point['round_time_s']*1e3:8.1f}"
+              f" ms  vtime={point['vtime_final']:7.1f}  "
+              f"tail_acc={point['tail_acc_final']:.3f}  "
+              f"faults={sum(point['fault_ledger'].values())}")
     out = ROOT / "BENCH_fl_round.json"
     with open(out, "w") as f:
         json.dump(results, f, indent=1)

@@ -13,6 +13,7 @@ committed updates.
 
   PYTHONPATH=src python examples/fl_async.py --rounds 12 --clients 8
   PYTHONPATH=src python examples/fl_async.py --beta 0  # pure FedBuff->FedAvg
+  PYTHONPATH=src python examples/fl_async.py --chaos heavy  # fault injection
 """
 import argparse
 
@@ -43,13 +44,18 @@ def main():
     ap.add_argument("--n-per-class", type=int, default=24)
     ap.add_argument("--target-acc", type=float, default=0.0,
                     help="0 = 90%% of the best final accuracy")
+    ap.add_argument("--chaos", nargs="?", const="light", default=None,
+                    choices=["light", "heavy"],
+                    help="inject faults (dropouts, stragglers, lost "
+                         "uplinks) from a named preset; bare --chaos "
+                         "means light")
     args = ap.parse_args()
 
     base = dict(dataset=args.dataset, strategy=args.strategy,
                 n_clients=args.clients, rounds=args.rounds,
                 local_steps=args.local_steps, gan_steps=args.gan_steps,
                 n_per_class=args.n_per_class, lr=3e-3, trace="skewed",
-                staleness_beta=args.beta)
+                staleness_beta=args.beta, chaos=args.chaos)
     runs = {
         "full-sync": FLConfig(**base, participation="full"),
         "sync-partial": FLConfig(**base, participation="sync-partial",
@@ -92,6 +98,15 @@ def main():
     print(f"\nasync virtual timeline: commits at "
           f"{['%.1f' % t for t in async_h.vtime]}")
     print(f"async staleness per commit: {async_h.staleness}")
+    if args.chaos:
+        # what the chaos layer actually did to each policy: every fault
+        # is deterministic (same seed -> same ledger) and recovered
+        # from, never silently dropped on the floor
+        print(f"\nfault ledger per policy (--chaos {args.chaos}):")
+        for name, h in hists.items():
+            led = h.meta["fault_ledger"]
+            line = ", ".join(f"{k}: {v}" for k, v in led.items() if v)
+            print(f"  {name:15s} {line or '(no faults fired)'}")
 
 
 if __name__ == "__main__":

@@ -75,4 +75,47 @@ assert h.vtime == sorted(h.vtime) and h.vtime[0] > 0
 print("async smoke run OK:", {"participation": h.participation,
                               "staleness": h.staleness,
                               "vtime": h.vtime})
+
+import numpy as np
+
+from repro.fl.sched import ChaosConfig
+
+# chaos smoke: a seeded dropout+straggler+lost-uplink sync-partial run
+# must finish, match the sequential oracle client-for-client, report a
+# non-empty fault ledger, and stay on the fused wave program — if chaos
+# silently fell back to the fault-free subset_round path, fail loudly
+chaos = ChaosConfig(dropout_prob=0.4, straggler_sigma=0.5,
+                    uplink_loss_prob=0.4, max_retries=2)
+cbase = dict(dataset="pacs", strategy="fedclip", n_clients=4, rounds=3,
+             local_steps=3, n_per_class=12, batch_size=8, lr=3e-3,
+             participation="sync-partial", clients_per_round=2,
+             trace="skewed", chaos=chaos)
+h = run_federated(FLConfig(**cbase))
+hs = run_federated(FLConfig(**cbase, engine="sequential"))
+led = h.meta["fault_ledger"]
+assert sum(led.values()) > 0, ("chaos run fired no faults", led)
+assert led == hs.meta["fault_ledger"], (led, hs.meta["fault_ledger"])
+assert h.participation == hs.participation
+for a, b in zip(h.client_loss, hs.client_loss):
+    np.testing.assert_allclose(a, b, atol=1e-3)
+assert "wave_round" in h.meta["n_compiles_by_kind"], h.meta
+assert "subset_round" not in h.meta["n_compiles_by_kind"], \
+    ("chaos sync round silently took the fault-free subset path",
+     h.meta["n_compiles_by_kind"])
+print("sync-partial chaos smoke OK:", {"fault_ledger": led,
+      "participation": h.participation})
+
+# async chaos: a lost uplink must be retried on the virtual clock and
+# eventually delivered — the run finishes with a sorted timeline
+h = run_federated(FLConfig(
+    dataset="pacs", strategy="fedclip", n_clients=4, rounds=3,
+    local_steps=3, n_per_class=12, batch_size=8, lr=3e-3,
+    participation="async", clients_per_round=2, trace="skewed",
+    chaos=ChaosConfig(uplink_loss_prob=0.6, max_retries=2)))
+led = h.meta["fault_ledger"]
+assert led["uplinks_lost"] >= 1, led
+assert led["n_retries"] >= 1, led
+assert h.vtime == sorted(h.vtime)
+print("async chaos smoke OK:", {"fault_ledger": led,
+                                "vtime": h.vtime})
 EOF

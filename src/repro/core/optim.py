@@ -104,6 +104,18 @@ def adam_scan(grad_fn, params, state: AdamState, xs, *, lr, b1=0.9,
     return params, state, aux
 
 
+def step_mask(n_steps, length: int):
+    """Canonical ``active`` mask for the masked scans: the first
+    ``n_steps`` of ``length`` scan steps live, the tail no-ops.
+    ``n_steps`` may be a traced scalar (the cohort engine passes
+    per-client counts under vmap). This is the one definition of
+    "cut at step s" shared by the fused engines, the chaos layer's
+    partial-work recovery, and the recovery property tests — cutting a
+    run at ``s`` via this mask is bitwise running exactly ``s`` steps
+    (params, both Adam moments, and the step counter)."""
+    return jnp.arange(length) < n_steps
+
+
 def sgd_update(grads, params, *, lr):
     return jax.tree.map(
         lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)

@@ -94,6 +94,11 @@ class CohortConfig:
     lr: float
     mesh: Any = None          # optional Mesh: shard cohort over dp axes
     donate: bool = True       # donate the global-trainable buffers
+    # stage the masked (heterogeneous-step) programs even when every
+    # client's trace multiplier is 1 — the chaos layer cuts step counts
+    # per client at dispatch time, which is just a heterogeneous step
+    # profile the engine must be staged to honor
+    force_het: bool = False
 
 
 def encode_rows(frozen, ccfg, *, use_lora: bool, rows, runtime=None,
@@ -274,7 +279,7 @@ class CohortEngine:
                 f"strategies.MAX_STEP_MULT={strategies_lib.MAX_STEP_MULT}"
                 " — the fused scan length must stay bounded")
         self.max_steps = cfg.local_steps * int(self.step_mult.max())
-        self._het = bool(self.step_mult.max() > 1)
+        self._het = bool(self.step_mult.max() > 1 or cfg.force_het)
 
         if cfg.mesh is not None:
             shards = mesh_lib.cohort_axis_size(cfg.mesh)
@@ -324,6 +329,16 @@ class CohortEngine:
         program, and scatter them into their reserved slots. One staging
         pipeline, two passes over disjoint rows."""
         gan_job.resolve()
+        # chaos: clients that dropped between launch and resolve never
+        # delivered their synthesized rows, but the padded pool layout
+        # (fixed at launch) reserved slots for them — shrink their lens
+        # back to the raw pool so the zero-feature reserved rows are
+        # never sampled (lens is the sampling bound, so this is exact)
+        dropped = [i for i in sorted(getattr(gan_job, "dropped", ()))
+                   if len(gan_job.need.get(i, ())) > 0]
+        if dropped:
+            raw = jnp.asarray([clients[i].n for i in dropped], jnp.int32)
+            self.lens = self.lens.at[jnp.asarray(dropped)].set(raw)
         aug = [(i, c.aug_images) for i, c in enumerate(clients)
                if c.aug_images is not None and len(c.aug_images)]
         if not aug:
@@ -408,7 +423,7 @@ class CohortEngine:
             return g, (loss, acc)
 
         active = None if n_steps is None else \
-            jnp.arange(ix.shape[0]) < n_steps
+            optim.step_mask(n_steps, ix.shape[0])
         tr, opt, (ls, accs) = optim.adam_scan(
             grad_fn, tr, opt, ix, lr=lr, grad_clip=1.0, active=active)
         if n_steps is None:

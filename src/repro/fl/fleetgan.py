@@ -99,6 +99,7 @@ class FleetGANReport:
     n_clients: int
     n_eligible: int
     n_synth: int = 0
+    n_dropped: int = 0   # eligible clients lost between launch/resolve
     groups: List[Tuple[int, int]] = field(default_factory=list)
     compile_time_s: float = 0.0
     prep_time_s: float = 0.0
@@ -167,10 +168,30 @@ class FleetGANJob:
     _synth: Sequence = ()                   # [(pos, need, synth row)]
     _synth_handle: Optional[runtime_lib.Handle] = None
     _resolved: bool = False
+    _dropped: set = field(default_factory=set)
 
     @property
     def resolved(self) -> bool:
         return self._resolved
+
+    @property
+    def dropped(self) -> frozenset:
+        return frozenset(self._dropped)
+
+    def mark_dropped(self, positions) -> None:
+        """Chaos hook: client positions that dropped between launch and
+        resolve. Their device work already ran (the stacked programs are
+        in flight), but nothing is written back — no GAN params, no
+        synthesized rebalancing rows — exactly as if the client had
+        vanished before uploading. The cohort engine shrinks their
+        reserved pool slots (``_merge_gan_features``), and the
+        sequential oracle simply skips ``prepare_gan`` for them, so both
+        executors see the same post-drop pools."""
+        if self._resolved:
+            raise RuntimeError(
+                "cannot drop clients from an already-resolved fleet-GAN "
+                "job — mark dropouts between launch and resolve")
+        self._dropped.update(int(p) for p in positions)
 
     def resolve(self) -> FleetGANReport:
         if self._resolved:
@@ -180,8 +201,11 @@ class FleetGANJob:
         if self._params is not None:
             d_l = np.asarray(self._ms["d_loss"])
             g_l = np.asarray(self._ms["g_loss"])
+            rep.n_dropped = sum(
+                1 for i in self._dropped
+                if 0 <= i < len(self._clients) and self._eligible[i])
             for i, c in enumerate(self._clients):
-                if not self._eligible[i]:
+                if not self._eligible[i] or i in self._dropped:
                     continue
                 c.gan_cfg = self._cfg
                 c.gan_params = jax.tree.map(lambda l: l[i], self._params)
@@ -195,6 +219,8 @@ class FleetGANJob:
         if self._synth:
             imgs = np.asarray(self._synth_handle.result(), np.float32)
             for pos, nd, row in self._synth:
+                if pos in self._dropped:
+                    continue      # synthesized, never delivered
                 self._clients[pos].aug_images = imgs[row, :len(nd)]
                 self._clients[pos].aug_labels = nd
                 rep.n_synth += len(nd)

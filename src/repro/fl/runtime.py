@@ -54,6 +54,7 @@ stages the CLIP pools while those programs run, then resolves.
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from typing import Any, Callable, Dict, Sequence, Tuple
 
 import jax
@@ -131,10 +132,23 @@ class ProgramRuntime:
     so ``History.meta`` reports a single unified compile breakdown, and
     identical programs built by different engines (e.g. a benchmark
     sweeping cohort widths over one staged population) share compiles.
+
+    ``max_entries`` bounds the executable cache with LRU eviction (0 =
+    unbounded, the default): long chaos sweeps touch many width/step-
+    profile buckets, and without a bound every one stays pinned for the
+    process lifetime. An evicted program recompiles (and recharges the
+    ledger) on next use; eviction counts land per kind in ``stats()``
+    (``n_evicted``) and in total via ``n_evictions``, so a sweep whose
+    bound is set too tight shows up in the compile ledger instead of as
+    silent thrash.
     """
 
-    def __init__(self):
-        self._exes: Dict[Tuple, Any] = {}
+    def __init__(self, max_entries: int = 0):
+        if max_entries < 0:
+            raise ValueError(f"max_entries={max_entries} must be >= 0 "
+                             "(0 disables eviction)")
+        self.max_entries = int(max_entries)
+        self._exes: "OrderedDict[Tuple, Any]" = OrderedDict()
         self._kinds: Dict[str, Dict[str, float]] = {}
 
     # -- cache ---------------------------------------------------------
@@ -165,6 +179,15 @@ class ProgramRuntime:
                 kind, {"n_compiles": 0, "compile_time_s": 0.0})
             k["n_compiles"] += 1
             k["compile_time_s"] += dt
+            while self.max_entries and \
+                    len(self._exes) > self.max_entries:
+                old_key, _ = self._exes.popitem(last=False)
+                ok = self._kinds.setdefault(
+                    old_key[0],
+                    {"n_compiles": 0, "compile_time_s": 0.0})
+                ok["n_evicted"] = int(ok.get("n_evicted", 0)) + 1
+        else:
+            self._exes.move_to_end(key)
         return exe
 
     def run(self, kind: str, build, args, **kw):
@@ -194,6 +217,12 @@ class ProgramRuntime:
     @property
     def compile_time_s(self) -> float:
         return sum(v["compile_time_s"] for v in self._kinds.values())
+
+    @property
+    def n_evictions(self) -> int:
+        """Total LRU evictions (0 while the cache is unbounded)."""
+        return sum(int(v.get("n_evicted", 0))
+                   for v in self._kinds.values())
 
     def subtotal(self, prefix: str) -> Tuple[int, float]:
         """(n_compiles, compile_time_s) summed over kinds matching

@@ -39,6 +39,15 @@ Policies:
    staleness-discounted commits, freed slots back-filled by
    availability-weighted draws from the idle population.
 
+The chaos layer (``chaos``) hardens all three policies against fleet
+faults: deterministic per-client fault schedules (mid-round dropout
+with exact partial-work recovery via the engines' masked scans,
+dark-window unavailability, device-class stragglers, lost/corrupt
+uplinks with bounded retry), drawn host-side at the true population
+shape so the fused engine and the sequential oracle stay parity oracles
+under chaos, and accounted in a ``FaultLedger`` that ``History.meta``
+reports.
+
 Invariants (see ROADMAP "Scheduler subsystem (PR 2)"): selection and
 event times are drawn with ``jax.random`` on replicated host inputs
 (mesh-invariant); subset rounds reuse the engine's staged pools and
@@ -46,6 +55,9 @@ batch-sampling key discipline so the sequential oracle reproduces them
 exactly; quantization stays leading-axis-inert, so per-round uplink
 bytes are exactly ``K x per-client payload``.
 """
+from repro.fl.sched.chaos import (CHAOS_PRESETS, ChaosConfig,
+                                  ChaosSchedule, FaultLedger,
+                                  corrupt_delta, resolve_chaos)
 from repro.fl.sched.events import EventQueue
 from repro.fl.sched.policies import (AsyncBufferedScheduler, Cohort,
                                      CohortExec, FullSyncScheduler,
@@ -53,13 +65,16 @@ from repro.fl.sched.policies import (AsyncBufferedScheduler, Cohort,
                                      SyncPartialScheduler,
                                      make_scheduler, stack_client_deltas,
                                      staleness_weights)
-from repro.fl.sched.traces import (AvailabilityTrace, resolve_trace,
+from repro.fl.sched.traces import (AvailabilityTrace, diurnal_trace,
+                                   load_trace, resolve_trace, save_trace,
                                    skewed_trace, uniform_trace)
 
 __all__ = [
-    "AsyncBufferedScheduler", "AvailabilityTrace", "Cohort",
-    "CohortExec", "EventQueue", "FullSyncScheduler", "Scheduler",
-    "SequentialExec", "SyncPartialScheduler", "make_scheduler",
-    "resolve_trace", "skewed_trace", "stack_client_deltas",
-    "staleness_weights", "uniform_trace",
+    "AsyncBufferedScheduler", "AvailabilityTrace", "CHAOS_PRESETS",
+    "ChaosConfig", "ChaosSchedule", "Cohort", "CohortExec",
+    "EventQueue", "FaultLedger", "FullSyncScheduler", "Scheduler",
+    "SequentialExec", "SyncPartialScheduler", "corrupt_delta",
+    "diurnal_trace", "load_trace", "make_scheduler", "resolve_chaos",
+    "resolve_trace", "save_trace", "skewed_trace",
+    "stack_client_deltas", "staleness_weights", "uniform_trace",
 ]

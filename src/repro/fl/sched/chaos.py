@@ -1,0 +1,298 @@
+"""Deterministic fault injection for the round scheduler (chaos layer).
+
+Real fleets are not the idealized population the availability traces
+describe: clients drop out mid-round after completing only part of
+their local steps, go dark for whole rounds, straggle by device class,
+and lose or corrupt their uplink payloads. This module draws all of
+those faults as a *deterministic schedule* — a pure function of
+``(chaos key, fault kind, round/dispatch tag, client position)`` — so a
+chaos run is exactly as reproducible as a fault-free one, and the fused
+cohort engine and the sequential oracle (which share one
+:class:`ChaosSchedule` through the scheduler) experience bitwise the
+same faults.
+
+Draw discipline (ROADMAP "RNG discipline"): every fault vector is drawn
+with ``jax.random`` on replicated host inputs at the TRUE population
+shape ``(n,)`` — threefry is not shape-stable, so drawing per-cohort
+would make the fault schedule depend on who else was selected. Cohorts
+index into the population vector instead. Fault kinds fold distinct
+prime tags into the chaos key so streams never collide with each other
+or with the scheduler's selection/dispatch/jitter tags.
+
+Recovery semantics the schedulers implement on top of this schedule:
+
+- **Mid-round dropout** — a dropped client's local work is cut at its
+  last completed step ``s``: the fused engines run the same
+  fixed-length scan with ``active`` masked past ``s`` (a masked
+  ``adam_scan``/``gan_scan`` step is a bitwise no-op on params and full
+  optimizer state, so partial work is exact by construction), and its
+  delta commits with sample-count weight prorated by ``s / full``.
+- **Transient unavailability** — a dark window keeps a client out of
+  selection for ``unavail_len`` consecutive rounds.
+- **Stragglers** — lognormal per-dispatch slowdowns times a per-device-
+  class multiplier stretch virtual durations; sync rounds pay the max
+  (barrier), async rounds just reorder commits.
+- **Lost uplinks** — a lost delta is not committed; the client re-queues
+  with bounded exponential backoff on the virtual clock and the attempt
+  at ``max_retries`` always delivers (retries bound *delay*, never
+  liveness — the event loop and the round loop can always make
+  progress).
+- **Corrupt uplinks** — the delta's quantization scales are poisoned to
+  NaN; ``server.check_delta`` rejects it loudly in strict mode or the
+  scheduler skips-and-ledgers it under ``tolerate_corrupt=True``.
+
+Every injected fault increments the mutable :class:`FaultLedger`, which
+``History.meta["fault_ledger"]`` reports — a chaos run that silently
+fell back to the fault-free path shows an empty ledger, which CI treats
+as a failure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QTensor
+
+# fold_in tags separating fault streams; primes disjoint from the
+# scheduler's _SEL/_DISPATCH/_JITTER tags (101/103/107)
+_DROP_TAG = 211      # mid-round dropout indicator
+_CUT_TAG = 223       # dropout cut-point fraction
+_STRAG_TAG = 227     # lognormal straggler multiplier
+_LOST_TAG = 229      # uplink loss indicator (per attempt)
+_CORR_TAG = 233      # uplink corruption indicator
+_DARK_TAG = 239      # unavailability-window starts (per round)
+_GAN_TAG = 241       # dropout between GAN launch and resolve
+
+# async dispatches tag their fault draws by a monotone dispatch sequence
+# offset far above any round index, so sync (round-tagged) and async
+# (dispatch-tagged) streams can never collide
+ASYNC_TAG0 = 1 << 20
+
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    """Fault-injection knobs. All probabilities are per client per
+    round (sync) or per dispatch (async); zeros disable that fault."""
+    dropout_prob: float = 0.0      # mid-round dropout (partial work)
+    unavail_prob: float = 0.0      # dark-window start probability
+    unavail_len: int = 2           # dark-window length in rounds
+    straggler_sigma: float = 0.0   # lognormal slowdown sigma
+    class_mult: Tuple[float, ...] = ()   # per-device-class speed mult
+    uplink_loss_prob: float = 0.0  # delta lost in flight (per attempt)
+    corrupt_prob: float = 0.0      # delta scales poisoned to NaN
+    max_retries: int = 3           # lost-uplink retries before forced ok
+    retry_backoff: float = 2.0     # virtual secs, doubled per attempt
+    tolerate_corrupt: bool = True  # skip-and-ledger vs raise
+
+    def __post_init__(self):
+        for name in ("dropout_prob", "unavail_prob", "uplink_loss_prob",
+                     "corrupt_prob"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name}={p} outside [0, 1]")
+        if self.unavail_len < 1:
+            raise ValueError(f"unavail_len={self.unavail_len} < 1")
+        if self.max_retries < 1:
+            raise ValueError(f"max_retries={self.max_retries} < 1")
+        if self.retry_backoff <= 0:
+            raise ValueError(
+                f"retry_backoff={self.retry_backoff} must be positive")
+        if any(m <= 0 for m in self.class_mult):
+            raise ValueError(
+                f"class_mult entries must be positive: {self.class_mult}")
+
+
+CHAOS_PRESETS: Dict[str, ChaosConfig] = {
+    "light": ChaosConfig(dropout_prob=0.1, straggler_sigma=0.3,
+                         uplink_loss_prob=0.05),
+    "heavy": ChaosConfig(dropout_prob=0.25, unavail_prob=0.15,
+                         straggler_sigma=0.6, uplink_loss_prob=0.15,
+                         corrupt_prob=0.05),
+}
+
+
+def resolve_chaos(spec) -> Optional[ChaosConfig]:
+    """Accept None | preset name | ChaosConfig (FLConfig.chaos routes
+    through here, like ``resolve_trace`` for traces)."""
+    if spec is None:
+        return None
+    if isinstance(spec, ChaosConfig):
+        return spec
+    if isinstance(spec, str):
+        if spec in CHAOS_PRESETS:
+            return CHAOS_PRESETS[spec]
+        raise ValueError(f"unknown chaos preset {spec!r} "
+                         f"(have {sorted(CHAOS_PRESETS)})")
+    raise ValueError(f"unknown chaos spec {spec!r}")
+
+
+@dataclass
+class FaultLedger:
+    """Mutable per-run fault accounting, reported via
+    ``History.meta["fault_ledger"]``. Counters only — the schedule
+    itself is replayable from (config, key), so the ledger is a summary,
+    not the source of truth."""
+    n_dropped: int = 0               # mid-round dropouts
+    partial_steps_recovered: int = 0  # local steps salvaged from them
+    n_retries: int = 0               # lost-uplink re-sends
+    uplinks_lost: int = 0            # lost delivery attempts
+    deltas_corrupt: int = 0          # payloads poisoned in flight
+    deltas_skipped: int = 0          # rejected by check_delta (tolerant)
+    commits_skipped: int = 0         # rounds with zero surviving deltas
+    client_rounds_dark: int = 0      # client-rounds inside dark windows
+    gan_dropped: int = 0             # clients lost between GAN launch
+                                     # and resolve (aug discarded)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {k: int(v) for k, v in
+                dataclasses.asdict(self).items()}
+
+    def total(self) -> int:
+        """Total injected faults — zero means the run silently took the
+        fault-free path (CI fails on that under chaos)."""
+        return sum(self.as_dict().values())
+
+
+class ChaosSchedule:
+    """Deterministic per-client fault schedule plus its ledger.
+
+    One instance is shared by a scheduler and both of its executors; the
+    fused engine and the sequential oracle therefore see identical
+    faults and stay parity oracles under chaos. All draws happen
+    host-side at the true population shape (see module docstring)."""
+
+    def __init__(self, cfg: ChaosConfig, key, trace):
+        self.cfg = cfg
+        self.trace = trace
+        self.n = trace.n
+        self._key = key
+        self.ledger = FaultLedger()
+        self._dark_starts: Dict[int, np.ndarray] = {}
+
+    # -- raw streams ---------------------------------------------------
+    def _k(self, *tags):
+        k = self._key
+        for t in tags:
+            k = jax.random.fold_in(k, int(t))
+        return k
+
+    def _u(self, *tags) -> np.ndarray:
+        """Uniform(0,1) vector over the full population."""
+        return np.asarray(
+            jax.random.uniform(self._k(*tags), (self.n,)), np.float64)
+
+    def _g(self, *tags) -> np.ndarray:
+        """Standard-normal vector over the full population."""
+        return np.asarray(
+            jax.random.normal(self._k(*tags), (self.n,)), np.float64)
+
+    # -- fault draws ---------------------------------------------------
+    def cut_steps(self, tag: int, sel, n_steps):
+        """Mid-round dropout: returns ``(cut, dropped)`` where ``cut``
+        is each selected client's completed step count. A dropped client
+        cuts uniformly in ``[1, full - 1]`` (it always completes at
+        least one step and never its last — a zero-step participant is a
+        no-show, which is the dark-window fault, not this one); others
+        keep their full count."""
+        sel = np.asarray(sel, np.int64)
+        full = np.asarray(n_steps, np.int64)
+        p = self.cfg.dropout_prob
+        if p <= 0 or len(sel) == 0:
+            return full.copy(), np.zeros(len(sel), bool)
+        dropped = (self._u(_DROP_TAG, tag)[sel] < p) & (full > 1)
+        frac = self._u(_CUT_TAG, tag)[sel]
+        cut = np.where(dropped,
+                       1 + np.floor(frac * (full - 1)).astype(np.int64),
+                       full)
+        return cut, dropped
+
+    def straggler_mult(self, tag: int, sel) -> np.ndarray:
+        """Per-dispatch duration multiplier: lognormal slowdown times
+        the client's device-class multiplier."""
+        sel = np.asarray(sel, np.int64)
+        out = np.ones(len(sel), np.float64)
+        if self.cfg.straggler_sigma > 0:
+            out = np.exp(
+                self.cfg.straggler_sigma * self._g(_STRAG_TAG, tag))[sel]
+        if len(self.cfg.class_mult):
+            cm = np.asarray(self.cfg.class_mult, np.float64)
+            dc = np.asarray(self.trace.device_class, np.int64)[sel]
+            out = out * cm[np.clip(dc, 0, len(cm) - 1)]
+        return out
+
+    def dark_mask(self, rnd: int) -> np.ndarray:
+        """Transient-unavailability mask at round ``rnd``: a client is
+        dark iff a window started within the last ``unavail_len``
+        rounds. Window starts are drawn once per round and cached, so
+        the mask is consistent across policies and repeat queries."""
+        if self.cfg.unavail_prob <= 0:
+            return np.zeros(self.n, bool)
+        dark = np.zeros(self.n, bool)
+        for r in range(max(0, rnd - self.cfg.unavail_len + 1), rnd + 1):
+            starts = self._dark_starts.get(r)
+            if starts is None:
+                starts = self._u(_DARK_TAG, r) < self.cfg.unavail_prob
+                self._dark_starts[r] = starts
+            dark |= starts
+        return dark
+
+    def uplink_lost(self, tag: int, cid: int, attempt: int) -> bool:
+        """Did client ``cid``'s delivery attempt number ``attempt`` (0 =
+        first send) lose its payload? Bounded: the attempt at
+        ``max_retries`` always delivers, so retries bound delay — never
+        liveness — and the virtual clock stays deterministic."""
+        if self.cfg.uplink_loss_prob <= 0 or \
+                attempt >= self.cfg.max_retries:
+            return False
+        return bool(self._u(_LOST_TAG, tag, attempt)[int(cid)] <
+                    self.cfg.uplink_loss_prob)
+
+    def corrupt_uplink(self, tag: int, cid: int) -> bool:
+        if self.cfg.corrupt_prob <= 0:
+            return False
+        return bool(self._u(_CORR_TAG, tag)[int(cid)] <
+                    self.cfg.corrupt_prob)
+
+    def gan_dropouts(self) -> np.ndarray:
+        """Bool mask of clients that drop between fleet-GAN launch and
+        resolve (their synthesized rebalancing sets are discarded; the
+        raw pool trains on). Drawn once per run."""
+        if self.cfg.dropout_prob <= 0:
+            return np.zeros(self.n, bool)
+        return self._u(_GAN_TAG, 0) < self.cfg.dropout_prob
+
+
+def corrupt_delta(delta):
+    """Flaky-uplink corruption stand-in: poison the first float leaf of
+    a (possibly quantized) client delta with NaN — for QTensor leaves
+    that is the dequantization ``scales``, i.e. exactly the bytes a
+    flipped wire bit would hit. The poisoned tree keeps its treedef and
+    shapes so only ``server.check_delta``'s finiteness guard (not a
+    shape error downstream) can catch it."""
+    state = {"done": False}
+
+    def f(l):
+        if state["done"]:
+            return l
+        if isinstance(l, QTensor):
+            state["done"] = True
+            return QTensor(q=l.q,
+                           scales=jnp.full_like(l.scales, jnp.nan),
+                           bits=l.bits, mode=l.mode, block=l.block,
+                           out_dtype=l.out_dtype,
+                           orig_shape=l.orig_shape)
+        if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating):
+            state["done"] = True
+            return jnp.full_like(jnp.asarray(l), jnp.nan)
+        return l
+
+    out = jax.tree.map(f, delta,
+                       is_leaf=lambda l: isinstance(l, QTensor))
+    if not state["done"]:
+        raise ValueError("corrupt_delta: no float leaf to poison")
+    return out

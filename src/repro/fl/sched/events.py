@@ -14,26 +14,30 @@ from typing import List, Tuple
 
 
 class EventQueue:
-    """Min-heap of (time, seq, cid) client-finish events with a
-    monotonic virtual clock ``now``."""
+    """Min-heap of (time, seq, cid, tag) client-finish events with a
+    monotonic virtual clock ``now``. ``tag`` is an opaque small integer
+    the scheduler threads through the queue — the chaos layer uses it as
+    the delivery-attempt counter for lost-uplink retries, so backoff
+    state rides the event itself and the queue stays stateless."""
 
     def __init__(self):
-        self._heap: List[Tuple[float, int, int]] = []
+        self._heap: List[Tuple[float, int, int, int]] = []
         self._seq = 0
         self.now = 0.0
 
     def __len__(self) -> int:
         return len(self._heap)
 
-    def push(self, time: float, cid: int) -> None:
+    def push(self, time: float, cid: int, tag: int = 0) -> None:
         if time < self.now:
             raise ValueError(
                 f"event at t={time} is in the past (now={self.now})")
-        heapq.heappush(self._heap, (float(time), self._seq, int(cid)))
+        heapq.heappush(self._heap,
+                       (float(time), self._seq, int(cid), int(tag)))
         self._seq += 1
 
-    def pop(self) -> Tuple[float, int]:
-        """Pop the earliest (time, cid) and advance the clock."""
-        t, _, cid = heapq.heappop(self._heap)
+    def pop(self) -> Tuple[float, int, int]:
+        """Pop the earliest (time, cid, tag) and advance the clock."""
+        t, _, cid, tag = heapq.heappop(self._heap)
         self.now = max(self.now, t)
-        return t, cid
+        return t, cid, tag

@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.quant import QTensor
 from repro.fl import cohort as cohort_lib
 from repro.fl import server
+from repro.fl.sched import chaos as chaos_lib
 from repro.fl.sched.events import EventQueue
 from repro.fl.sched.traces import AvailabilityTrace, resolve_trace
 
@@ -125,6 +126,11 @@ class CohortExec:
             global_tr, jnp.asarray(weights, jnp.float32),
             stack_client_deltas(deltas))
 
+    def client_masses(self) -> np.ndarray:
+        """Per-client sample counts over the full population (the m_i of
+        every weighting rule; chaos prorates them by completed steps)."""
+        return np.asarray(self.engine.client_n, np.float64)
+
 
 class SequentialExec:
     """Reference executor: per-client Python loop over
@@ -192,6 +198,9 @@ class SequentialExec:
             global_tr, list(zip(np.asarray(weights, np.float64),
                                 deltas)))
 
+    def client_masses(self) -> np.ndarray:
+        return np.asarray([c.n for c in self.clients], np.float64)
+
 
 # ---------------------------------------------------------------------
 # policies
@@ -204,7 +213,8 @@ class Scheduler:
     name = "base"
 
     def __init__(self, *, executor, trace: AvailabilityTrace,
-                 local_steps: int, clients_per_round: int = 0):
+                 local_steps: int, clients_per_round: int = 0,
+                 chaos: Optional[chaos_lib.ChaosSchedule] = None):
         self.exec = executor
         self.trace = trace
         self.local_steps = local_steps
@@ -216,6 +226,20 @@ class Scheduler:
                 f"{self.n} active clients")
         self.k = k
         self._mult = np.asarray(trace.step_mult, np.int32)
+        # chaos: shared fault schedule (None = fault-free). One schedule
+        # instance serves both executors, so the fused engine and the
+        # sequential oracle experience bitwise the same faults.
+        self.chaos = chaos
+        if chaos is not None and chaos.n != self.n:
+            raise ValueError(
+                f"chaos schedule built for {chaos.n} clients, trace has "
+                f"{self.n}")
+        # lost-uplink retry queue (sync policies): cid -> next attempt
+        # number; retried clients are re-selected first the next round
+        self._retryq: Dict[int, int] = {}
+        # sync virtual clock under chaos: a barrier round lasts as long
+        # as its slowest (straggler-stretched) participant
+        self._vt = 0.0
 
     # -- helpers ------------------------------------------------------
     def _cohort_for(self, sel, staleness=None) -> Cohort:
@@ -228,15 +252,24 @@ class Scheduler:
                       n_steps=self.local_steps * self._mult[sel],
                       staleness=stal)
 
-    def _draw_clients(self, key, k: int) -> np.ndarray:
-        """Availability-weighted draw of k distinct client positions, on
-        replicated inputs (mesh-invariant)."""
-        if k >= self.n:
-            return np.arange(self.n, dtype=np.int32)
-        probs = self.trace.selection_probs()
-        return np.asarray(jax.random.choice(
-            key, self.n, (k,), replace=False, p=jnp.asarray(probs)),
-            np.int32)
+    def _draw_clients(self, key, k: int, rnd: int = 0,
+                      pool=None) -> np.ndarray:
+        """Availability-weighted draw of k distinct client positions
+        from ``pool`` (default: the whole population), on replicated
+        inputs (mesh-invariant). ``rnd`` is the virtual time fed to the
+        trace's diurnal availability cycle; for static traces it is
+        inert, keeping pre-chaos draws bit-identical."""
+        if pool is None:
+            pool = np.arange(self.n, dtype=np.int32)
+        pool = np.asarray(pool, np.int32)
+        if k >= len(pool):
+            return pool
+        probs = np.asarray(self.trace.availability_at(float(rnd)),
+                           np.float64)[pool]
+        pick = jax.random.choice(
+            key, len(pool), (k,), replace=False,
+            p=jnp.asarray(probs / probs.sum()))
+        return pool[np.asarray(pick)]
 
     # -- policy surface ----------------------------------------------
     def select(self, rnd: int, key) -> Cohort:
@@ -275,11 +308,100 @@ class SyncPartialScheduler(Scheduler):
     name = "sync-partial"
 
     def select(self, rnd: int, key) -> Cohort:
-        return self._cohort_for(
-            self._draw_clients(jax.random.fold_in(key, _SEL_TAG),
-                               self.k))
+        ksel = jax.random.fold_in(key, _SEL_TAG)
+        if self.chaos is None:
+            return self._cohort_for(self._draw_clients(ksel, self.k,
+                                                       rnd))
+        # chaos: exclude dark-window clients from the draw, and re-select
+        # lost-uplink clients first (bounded retry across rounds)
+        ch = self.chaos
+        dark = ch.dark_mask(rnd)
+        ch.ledger.client_rounds_dark += int(dark.sum())
+        pool = np.where(~dark)[0].astype(np.int32)
+        if len(pool) == 0:
+            # nobody reachable: take everyone rather than stall the run
+            pool = np.arange(self.n, dtype=np.int32)
+        forced = np.asarray(
+            sorted(c for c in self._retryq if not dark[c]),
+            np.int32)[:self.k]
+        rest = pool[~np.isin(pool, forced)]
+        k_rest = self.k - len(forced)
+        drawn = self._draw_clients(ksel, k_rest, rnd, pool=rest) \
+            if k_rest > 0 and len(rest) else \
+            np.zeros((0,), np.int32)
+        sel = np.concatenate([forced, drawn]) if len(forced) else drawn
+        if len(sel) == 0:
+            sel = forced if len(forced) else pool[:1]
+        return self._cohort_for(sel)
+
+    def _chaos_step(self, global_tr, rnd: int, key):
+        """One sync round under fault injection. The round runs as a
+        *wave* (an existing program kind — chaos adds zero compiles
+        beyond the width/step-profile buckets) so per-client deltas are
+        visible host-side for uplink loss/corruption injection; the
+        survivors commit with sample-count weights prorated by completed
+        steps, renormalized over the committed set."""
+        ch = self.chaos
+        cohort = self.select(rnd, key)
+        full = np.asarray(cohort.n_steps, np.int64)
+        cut, dropped = ch.cut_steps(rnd, cohort.sel, full)
+        ch.ledger.n_dropped += int(dropped.sum())
+        ch.ledger.partial_steps_recovered += int(cut[dropped].sum())
+        work = Cohort(sel=cohort.sel, n_steps=cut.astype(np.int32),
+                      staleness=cohort.staleness)
+        deltas, m = self.exec.run_wave(global_tr, work, key)
+        # the barrier waits for the slowest straggler-stretched client
+        dur = (np.asarray(self.trace.speed, np.float64)[cohort.sel] *
+               cut * ch.straggler_mult(rnd, cohort.sel))
+        self._vt += float(dur.max()) if len(dur) else 1.0
+        attempts = np.asarray([self._retryq.get(int(c), 0)
+                               for c in cohort.sel], np.int64)
+        ch.ledger.n_retries += int((attempts > 0).sum())
+        masses = self.exec.client_masses()[cohort.sel] * \
+            (cut / np.maximum(full, 1))
+        keep, kept_deltas, kept_masses = [], [], []
+        for j, cid in enumerate(np.asarray(cohort.sel)):
+            cid = int(cid)
+            if ch.uplink_lost(rnd, cid, int(attempts[j])):
+                ch.ledger.uplinks_lost += 1
+                self._retryq[cid] = int(attempts[j]) + 1
+                continue
+            self._retryq.pop(cid, None)
+            d = deltas[j]
+            if ch.corrupt_uplink(rnd, cid):
+                ch.ledger.deltas_corrupt += 1
+                d = chaos_lib.corrupt_delta(d)
+            if not server.delta_ok(d, global_tr):
+                if not ch.cfg.tolerate_corrupt:
+                    server.check_delta(
+                        d, global_tr,
+                        ctx=f"client {cid} delta (round {rnd})")
+                ch.ledger.deltas_skipped += 1
+                continue
+            keep.append(j)
+            kept_deltas.append(d)
+            kept_masses.append(masses[j])
+        if keep:
+            w = np.asarray(kept_masses, np.float64)
+            w = (w / w.sum()).astype(np.float32)
+            server.check_weights(w, len(keep))   # prorated, sum-checked
+            new_tr = self.exec.commit_buffer(global_tr, w, kept_deltas)
+        else:
+            ch.ledger.commits_skipped += 1
+            new_tr = global_tr
+        keep = np.asarray(keep, np.int64)
+        m = {
+            "loss": np.asarray(m["loss"])[keep],
+            "acc": np.asarray(m["acc"])[keep],
+            "uplink_bytes": int(m["uplink_bytes"]),
+            "participation": np.asarray(cohort.sel)[keep],
+            "staleness": np.zeros(len(keep), np.int32),
+            "vtime": float(self._vt)}
+        return new_tr, m
 
     def step(self, global_tr, rnd: int, key):
+        if self.chaos is not None:
+            return self._chaos_step(global_tr, rnd, key)
         cohort = self.select(rnd, key)
         new_tr, m = self.exec.run_sync(global_tr, cohort, key)
         new_tr = self.commit(new_tr, None, rnd)
@@ -293,6 +415,12 @@ class SyncPartialScheduler(Scheduler):
         key = jax.random.PRNGKey(0) if key is None else key
         cohort = self._cohort_for(np.arange(self.k, dtype=np.int32))
         copy = jax.tree.map(jnp.copy, global_tr)
+        if self.chaos is not None:
+            # chaos rounds dispatch the wave program (host-side commit),
+            # so warm that bucket instead of the in-program sync round
+            deltas, _ = self.exec.run_wave(copy, cohort, key)
+            jax.block_until_ready(jax.tree.leaves(deltas))
+            return
         out = self.exec.run_sync(copy, cohort, key)
         jax.block_until_ready(jax.tree.leaves(out[0]))
 
@@ -306,15 +434,27 @@ class FullSyncScheduler(SyncPartialScheduler):
     pools)."""
     name = "full-sync"
 
-    def __init__(self, *, executor, trace, local_steps):
+    def __init__(self, *, executor, trace, local_steps, chaos=None):
         super().__init__(executor=executor, trace=trace,
-                         local_steps=local_steps, clients_per_round=0)
+                         local_steps=local_steps, clients_per_round=0,
+                         chaos=chaos)
 
     def select(self, rnd: int, key) -> Cohort:
-        return self._cohort_for(np.arange(self.n, dtype=np.int32))
+        if self.chaos is None:
+            return self._cohort_for(np.arange(self.n, dtype=np.int32))
+        # chaos full-sync: everyone reachable (dark windows shrink the
+        # cohort; retry bookkeeping is inherited — a lost client is in
+        # next round's identity selection anyway)
+        dark = self.chaos.dark_mask(rnd)
+        self.chaos.ledger.client_rounds_dark += int(dark.sum())
+        sel = np.where(~dark)[0].astype(np.int32)
+        if len(sel) == 0:
+            sel = np.arange(self.n, dtype=np.int32)
+        return self._cohort_for(sel)
 
     def _gather_free(self) -> bool:
-        return self.exec.kind == "cohort" and int(self._mult.max()) == 1
+        return self.exec.kind == "cohort" and \
+            int(self._mult.max()) == 1 and self.chaos is None
 
     def step(self, global_tr, rnd: int, key):
         if not self._gather_free():
@@ -357,10 +497,12 @@ class AsyncBufferedScheduler(Scheduler):
 
     def __init__(self, *, executor, trace, local_steps,
                  clients_per_round: int = 0, staleness_beta: float = 0.5,
-                 concurrency: int = 0, client_n: Sequence[float]):
+                 concurrency: int = 0, client_n: Sequence[float],
+                 chaos=None):
         super().__init__(executor=executor, trace=trace,
                          local_steps=local_steps,
-                         clients_per_round=clients_per_round)
+                         clients_per_round=clients_per_round,
+                         chaos=chaos)
         self.buffer_size = self.k
         self.concurrency = min(self.n, concurrency or 2 * self.k)
         if self.concurrency < self.buffer_size:
@@ -374,59 +516,114 @@ class AsyncBufferedScheduler(Scheduler):
         self._inflight: Dict[int, dict] = {}
         self._buffer: List[dict] = []
         self._started = False
+        # monotone dispatch counter: chaos fault draws for async work
+        # are tagged per dispatch (offset into a range disjoint from the
+        # sync policies' round tags), so the fault schedule is a pure
+        # function of dispatch order — identical for both executors
+        self._dseq = 0
+        self._committed: List[dict] = []
 
     # -- event-loop internals -----------------------------------------
-    def _durations(self, sel: np.ndarray, n_steps: np.ndarray, key):
+    def _durations(self, sel: np.ndarray, n_steps: np.ndarray, key,
+                   tag=None):
         u = np.asarray(jax.random.uniform(
             jax.random.fold_in(key, _JITTER_TAG), (len(sel),)))
         speed = np.asarray(self.trace.speed)[sel]
-        return speed * np.asarray(n_steps, np.float64) * (1.0 + 0.1 * u)
+        dur = speed * np.asarray(n_steps, np.float64) * (1.0 + 0.1 * u)
+        if self.chaos is not None and tag is not None:
+            dur = dur * self.chaos.straggler_mult(tag, sel)
+        return dur
 
     def _dispatch(self, global_tr, sel, key):
         """Run one fused wave for ``sel`` from the current global model
-        and schedule their finish events."""
+        and schedule their finish events. Under chaos the dispatch draws
+        its fault slice first: mid-round dropouts cut per-client step
+        counts (the wave's masked scan recovers the partial work
+        exactly), stragglers stretch the finish times, and the per-entry
+        mass scale records the completed-step proration for commit."""
         cohort = self._cohort_for(sel)
+        scale = np.ones(cohort.k, np.float64)
+        tag = None
+        if self.chaos is not None:
+            ch = self.chaos
+            tag = chaos_lib.ASYNC_TAG0 + self._dseq
+            self._dseq += 1
+            full = np.asarray(cohort.n_steps, np.int64)
+            cut, dropped = ch.cut_steps(tag, cohort.sel, full)
+            ch.ledger.n_dropped += int(dropped.sum())
+            ch.ledger.partial_steps_recovered += int(cut[dropped].sum())
+            scale = cut / np.maximum(full, 1)
+            cohort = Cohort(sel=cohort.sel,
+                            n_steps=cut.astype(np.int32),
+                            staleness=cohort.staleness)
         deltas, m = self.exec.run_wave(global_tr, cohort, key)
-        durations = self._durations(cohort.sel, cohort.n_steps, key)
+        durations = self._durations(cohort.sel, cohort.n_steps, key,
+                                    tag)
         for j, ci in enumerate(cohort.sel):
             ci = int(ci)
             self.queue.push(self.queue.now + float(durations[j]), ci)
             self._inflight[ci] = {
                 "delta": deltas[j], "base_version": self.version,
                 "loss": float(m["loss"][j]), "acc": float(m["acc"][j]),
-                "bytes": m["uplink_bytes"] // cohort.k}
+                "bytes": m["uplink_bytes"] // cohort.k,
+                "scale": float(scale[j]), "tag": tag}
 
     def _fill_buffer(self):
         """Drain finish events until the buffer holds ``buffer_size``
         updates. Buffer order is finish order (deterministic: virtual
-        time, then push sequence). Idempotent once full."""
+        time, then push sequence). Idempotent once full. Under chaos a
+        popped event whose uplink is lost re-queues with exponential
+        backoff on the virtual clock, carrying its attempt count in the
+        event tag; the attempt at ``max_retries`` always delivers, so
+        the loop can never live-lock."""
         while len(self._buffer) < self.buffer_size:
             if not len(self.queue):
                 raise RuntimeError(
                     "async event queue drained with an unfilled buffer "
                     "(concurrency < buffer size, or select() called "
                     "before the first step dispatched work?)")
-            t, cid = self.queue.pop()
-            job = self._inflight.pop(cid)
+            t, cid, attempt = self.queue.pop()
+            job = self._inflight[cid]
+            if self.chaos is not None and \
+                    self.chaos.uplink_lost(job["tag"], cid, attempt):
+                ch = self.chaos
+                ch.ledger.uplinks_lost += 1
+                ch.ledger.n_retries += 1
+                self.queue.push(
+                    t + ch.cfg.retry_backoff * (2.0 ** attempt), cid,
+                    attempt + 1)
+                continue
+            del self._inflight[cid]
             self._buffer.append(dict(job, cid=cid,
                                      tau=self.version -
-                                     job["base_version"], finish=t))
+                                     job["base_version"], finish=t,
+                                     attempts=attempt))
 
-    def _backfill_draw(self, key) -> np.ndarray:
+    def _backfill_draw(self, key, rnd: int = 0) -> np.ndarray:
         """Pick ``buffer_size`` idle clients (not in flight, not
         buffered) to dispatch next, availability-weighted — the freed
         slots rotate across the whole population, not just the clients
-        that happened to start first."""
+        that happened to start first. Under chaos, dark-window clients
+        are excluded when enough lit ones remain (darkness never stalls
+        the pipeline)."""
         busy = set(self._inflight) | {e["cid"] for e in self._buffer}
         idle = np.asarray([i for i in range(self.n) if i not in busy],
                           np.int32)
         k = self.buffer_size
+        if self.chaos is not None and len(idle):
+            dark = self.chaos.dark_mask(rnd)
+            self.chaos.ledger.client_rounds_dark += \
+                int(dark[idle].sum())
+            lit = idle[~dark[idle]]
+            if len(lit) >= k:
+                idle = lit
         if len(idle) < k:
             raise RuntimeError(
                 f"{len(idle)} idle clients cannot back-fill {k} slots")
         if len(idle) == k:
             return idle
-        probs = np.asarray(self.trace.availability, np.float64)[idle]
+        probs = np.asarray(self.trace.availability_at(self.queue.now),
+                           np.float64)[idle]
         pick = jax.random.choice(
             key, len(idle), (k,), replace=False,
             p=jnp.asarray(probs / probs.sum()))
@@ -443,11 +640,40 @@ class AsyncBufferedScheduler(Scheduler):
 
     def commit(self, global_tr, updates, round_tag):
         """Staleness-discounted buffer flush: w_i ∝ m_i (1+τ_i)^(-β),
-        applied in the buffer's finish order."""
+        applied in the buffer's finish order. Under chaos the masses are
+        prorated by each entry's completed-step fraction, corrupt deltas
+        are skipped-and-ledgered (or raised, strict mode), and a flush
+        with zero survivors leaves the global — and the server version —
+        untouched."""
         entries = updates
-        w = staleness_weights(
-            self.client_n[[e["cid"] for e in entries]],
-            [e["tau"] for e in entries], self.beta)
+        if self.chaos is not None:
+            ch = self.chaos
+            kept = []
+            for e in entries:
+                d = e["delta"]
+                if ch.corrupt_uplink(e["tag"], e["cid"]):
+                    ch.ledger.deltas_corrupt += 1
+                    d = chaos_lib.corrupt_delta(d)
+                if not server.delta_ok(d, global_tr):
+                    if not ch.cfg.tolerate_corrupt:
+                        server.check_delta(
+                            d, global_tr,
+                            ctx=f"async client {e['cid']} delta")
+                    ch.ledger.deltas_skipped += 1
+                    continue
+                kept.append(e)
+            self._committed = kept
+            if not kept:
+                ch.ledger.commits_skipped += 1
+                return global_tr
+            entries = kept
+            masses = self.client_n[[e["cid"] for e in entries]] * \
+                np.asarray([e["scale"] for e in entries], np.float64)
+        else:
+            self._committed = list(entries)
+            masses = self.client_n[[e["cid"] for e in entries]]
+        w = staleness_weights(masses, [e["tau"] for e in entries],
+                              self.beta)
         new_tr = self.exec.commit_buffer(
             global_tr, w, [e["delta"] for e in entries])
         self.version += 1
@@ -455,8 +681,16 @@ class AsyncBufferedScheduler(Scheduler):
 
     def step(self, global_tr, rnd: int, key):
         if not self._started:
+            pool = None
+            if self.chaos is not None:
+                dark = self.chaos.dark_mask(rnd)
+                self.chaos.ledger.client_rounds_dark += int(dark.sum())
+                lit = np.where(~dark)[0].astype(np.int32)
+                if len(lit) >= self.concurrency:
+                    pool = lit
             sel = self._draw_clients(
-                jax.random.fold_in(key, _SEL_TAG), self.concurrency)
+                jax.random.fold_in(key, _SEL_TAG), self.concurrency,
+                rnd, pool=pool)
             self._dispatch(global_tr, sel,
                            jax.random.fold_in(key, _DISPATCH_TAG))
             self._started = True
@@ -467,16 +701,23 @@ class AsyncBufferedScheduler(Scheduler):
         # back-fill the freed slots from the idle population (the
         # committed clients plus anyone not yet started), training from
         # the new global at the current virtual time
-        sel = self._backfill_draw(jax.random.fold_in(key, _SEL_TAG + 1))
+        sel = self._backfill_draw(jax.random.fold_in(key, _SEL_TAG + 1),
+                                  rnd)
         self._dispatch(new_tr, sel,
                        jax.random.fold_in(key, _DISPATCH_TAG + 1))
+        # metrics cover the committed set (== the flushed buffer when
+        # fault-free); uplink bytes count every delivery attempt of the
+        # flushed entries — lost sends consumed real uplink
+        logged = self._committed if self.chaos is not None else entries
         m = {
-            "loss": np.asarray([e["loss"] for e in entries]),
-            "acc": np.asarray([e["acc"] for e in entries]),
-            "uplink_bytes": int(sum(e["bytes"] for e in entries)),
-            "participation": np.asarray([e["cid"] for e in entries],
+            "loss": np.asarray([e["loss"] for e in logged]),
+            "acc": np.asarray([e["acc"] for e in logged]),
+            "uplink_bytes": int(sum(
+                e["bytes"] * (1 + e.get("attempts", 0))
+                for e in entries)),
+            "participation": np.asarray([e["cid"] for e in logged],
                                         np.int32),
-            "staleness": np.asarray([e["tau"] for e in entries],
+            "staleness": np.asarray([e["tau"] for e in logged],
                                     np.int32),
             "vtime": float(self.queue.now)}
         return new_tr, m
@@ -496,7 +737,8 @@ class AsyncBufferedScheduler(Scheduler):
 def make_scheduler(participation: str, *, executor, trace,
                    local_steps: int, clients_per_round: int = 0,
                    staleness_beta: float = 0.5, concurrency: int = 0,
-                   client_n: Optional[Sequence[float]] = None):
+                   client_n: Optional[Sequence[float]] = None,
+                   chaos: Optional[chaos_lib.ChaosSchedule] = None):
     """Policy factory keyed by ``FLConfig.participation``."""
     if participation == "full":
         if clients_per_round not in (0, trace.n):
@@ -505,11 +747,11 @@ def make_scheduler(participation: str, *, executor, trace,
                 "for participation='full' (every client trains every "
                 "round) — use 'sync-partial' or 'async'")
         return FullSyncScheduler(executor=executor, trace=trace,
-                                 local_steps=local_steps)
+                                 local_steps=local_steps, chaos=chaos)
     if participation == "sync-partial":
         return SyncPartialScheduler(
             executor=executor, trace=trace, local_steps=local_steps,
-            clients_per_round=clients_per_round)
+            clients_per_round=clients_per_round, chaos=chaos)
     if participation == "async":
         if client_n is None:
             raise ValueError("async scheduling needs per-client sample "
@@ -518,5 +760,5 @@ def make_scheduler(participation: str, *, executor, trace,
             executor=executor, trace=trace, local_steps=local_steps,
             clients_per_round=clients_per_round,
             staleness_beta=staleness_beta, concurrency=concurrency,
-            client_n=client_n)
+            client_n=client_n, chaos=chaos)
     raise ValueError(f"unknown participation policy {participation!r}")

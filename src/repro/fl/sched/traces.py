@@ -8,7 +8,11 @@ vectors; the scheduler policies consume them as follows:
 
  - ``availability`` — sync-partial samples K of N clients with
    probability proportional to it; async uses it to pick which clients
-   start training first when concurrency is below N.
+   start training first when concurrency is below N. With a diurnal
+   cycle (``period > 0``) the effective propensity at virtual time t is
+   ``availability_at(t)``: the static vector modulated by a per-client-
+   phased sinusoid, so device classes in different "timezones" rotate
+   through the selectable population.
  - ``speed`` — async's virtual-time event loop finishes client i's job
    ``speed[i] * local_steps_i`` virtual seconds after dispatch (plus a
    small key-derived jitter drawn in a replicated dispatch, so event
@@ -16,13 +20,20 @@ vectors; the scheduler policies consume them as follows:
  - ``step_mult`` — client i runs ``local_steps * step_mult[i]`` local
    steps, clipped to ``strategies.MAX_STEP_MULT`` so the fused cohort
    scan keeps a bounded static length.
+ - ``device_class`` — small int per client (phone / tablet / laptop ...)
+   used by the chaos layer's per-class straggler multipliers and by
+   ``History``'s per-class fairness / staleness / tail-accuracy columns.
 
 Traces are plain numpy, deterministic in (n, seed), and never touch the
-device: they are *simulation inputs*, not learned state.
+device: they are *simulation inputs*, not learned state. They round-trip
+through JSON (``save_trace`` / ``load_trace``) so a scenario — including
+the chaos benchmarks' — can be replayed from a file instead of a seed.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass
+from typing import Any, Sequence
 
 import numpy as np
 
@@ -35,6 +46,10 @@ class AvailabilityTrace:
     speed: np.ndarray          # (n,) float > 0, virtual secs / local step
     step_mult: np.ndarray      # (n,) int in [1, MAX_STEP_MULT]
     name: str = "custom"
+    device_class: Any = None   # (n,) small int >= 0; default all-0
+    phase: Any = None          # (n,) diurnal phase in [0, 1); default 0
+    period: float = 0.0        # diurnal period in virtual secs; 0 = off
+    amplitude: float = 0.0     # diurnal modulation depth in [0, 1)
 
     def __post_init__(self):
         n = len(self.availability)
@@ -47,13 +62,43 @@ class AvailabilityTrace:
         if np.any(m < 1) or np.any(m > MAX_STEP_MULT):
             raise ValueError(
                 f"step_mult must lie in [1, {MAX_STEP_MULT}], got {m}")
+        dc = np.zeros(n, np.int32) if self.device_class is None else \
+            np.asarray(self.device_class, np.int32)
+        ph = np.zeros(n, np.float64) if self.phase is None else \
+            np.asarray(self.phase, np.float64)
+        if len(dc) != n or len(ph) != n:
+            raise ValueError("device_class/phase disagree on n_clients")
+        if np.any(dc < 0):
+            raise ValueError(f"device_class must be >= 0, got {dc}")
+        if not 0.0 <= float(self.amplitude) < 1.0:
+            # amplitude < 1 keeps availability_at strictly positive, so
+            # selection probabilities never degenerate mid-cycle
+            raise ValueError(
+                f"amplitude={self.amplitude} outside [0, 1)")
+        object.__setattr__(self, "device_class", dc)
+        object.__setattr__(self, "phase", ph)
 
     @property
     def n(self) -> int:
         return len(self.availability)
 
-    def selection_probs(self) -> np.ndarray:
+    @property
+    def n_device_classes(self) -> int:
+        return int(np.max(self.device_class)) + 1
+
+    def availability_at(self, t: float = 0.0) -> np.ndarray:
+        """Effective selection propensity at virtual time ``t``: the
+        static vector, diurnally modulated when ``period > 0``. Strictly
+        positive by the amplitude < 1 invariant."""
         a = np.asarray(self.availability, np.float64)
+        if self.period <= 0 or self.amplitude <= 0:
+            return a
+        cyc = np.sin(2.0 * np.pi * (float(t) / float(self.period) +
+                                    np.asarray(self.phase, np.float64)))
+        return a * (1.0 + float(self.amplitude) * cyc)
+
+    def selection_probs(self, t: float = 0.0) -> np.ndarray:
+        a = self.availability_at(t)
         return (a / a.sum()).astype(np.float64)
 
 
@@ -85,18 +130,87 @@ def skewed_trace(n: int, seed: int = 0, *, zipf: float = 1.2,
                              step_mult=mult, name=f"skewed(seed={seed})")
 
 
+def diurnal_trace(n: int, seed: int = 0, *, period: float = 24.0,
+                  amplitude: float = 0.8,
+                  class_speed: Sequence[float] = (1.0, 2.0, 4.0),
+                  zipf: float = 1.2, speed_sigma: float = 0.25,
+                  max_step_mult: int = 1) -> AvailabilityTrace:
+    """Fleet-realism population: Zipf base availability under a diurnal
+    cycle (per-client phases — "timezones" — spread in [0, 1)), a
+    device-class mix whose classes differ in base speed by
+    ``class_speed`` (class 0 fastest), lognormal within-class speed
+    spread, and optional heterogeneous step multipliers. Deterministic
+    in (n, seed); the chaos layer keys its per-class straggler
+    multipliers off ``device_class``."""
+    rs = np.random.RandomState(seed)
+    avail = 1.0 / np.arange(1, n + 1, dtype=np.float64) ** zipf
+    rs.shuffle(avail)
+    dc = rs.randint(0, len(class_speed), n).astype(np.int32)
+    speed = np.asarray(class_speed, np.float64)[dc] * \
+        np.exp(rs.normal(0.0, speed_sigma, n))
+    phase = rs.rand(n)
+    mmax = int(np.clip(max_step_mult, 1, MAX_STEP_MULT))
+    mult = rs.randint(1, mmax + 1, n).astype(np.int32)
+    return AvailabilityTrace(
+        availability=avail, speed=speed, step_mult=mult,
+        name=f"diurnal(seed={seed})", device_class=dc, phase=phase,
+        period=float(period), amplitude=float(amplitude))
+
+
+def save_trace(trace: AvailabilityTrace, path) -> None:
+    """Serialize a trace to JSON so a scenario replays from a file
+    (availability, speed, step multipliers, device classes, diurnal
+    parameters) instead of a seed."""
+    payload = {
+        "name": trace.name,
+        "availability": [float(v) for v in trace.availability],
+        "speed": [float(v) for v in trace.speed],
+        "step_mult": [int(v) for v in trace.step_mult],
+        "device_class": [int(v) for v in trace.device_class],
+        "phase": [float(v) for v in trace.phase],
+        "period": float(trace.period),
+        "amplitude": float(trace.amplitude),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def load_trace(path) -> AvailabilityTrace:
+    """Load a trace saved by :func:`save_trace` (validation re-runs in
+    ``__post_init__``, so a hand-edited file still fails loudly)."""
+    with open(path) as f:
+        d = json.load(f)
+    return AvailabilityTrace(
+        availability=np.asarray(d["availability"], np.float64),
+        speed=np.asarray(d["speed"], np.float64),
+        step_mult=np.asarray(d["step_mult"], np.int32),
+        name=str(d.get("name", "custom")),
+        device_class=np.asarray(d["device_class"], np.int32)
+        if "device_class" in d else None,
+        phase=np.asarray(d["phase"], np.float64)
+        if "phase" in d else None,
+        period=float(d.get("period", 0.0)),
+        amplitude=float(d.get("amplitude", 0.0)))
+
+
 def resolve_trace(spec, n: int, *, seed: int = 0) -> AvailabilityTrace:
-    """Accept None | "uniform" | "skewed" | "skewed-het" |
-    AvailabilityTrace (validated against n). FLConfig.trace routes
-    through here; "skewed-het" adds heterogeneous local-step multipliers
-    (up to MAX_STEP_MULT) on top of the skewed availability/speed
-    profile, exercising the masked-scan path from the public config."""
+    """Accept None | "uniform" | "skewed" | "skewed-het" | "diurnal" |
+    a ``.json`` trace-file path | AvailabilityTrace (validated against
+    n). FLConfig.trace routes through here; "skewed-het" adds
+    heterogeneous local-step multipliers (up to MAX_STEP_MULT) on top of
+    the skewed availability/speed profile, exercising the masked-scan
+    path from the public config; "diurnal" adds the device-class mix and
+    availability cycle the chaos/fairness machinery keys off."""
     if spec is None or spec == "uniform":
         return uniform_trace(n)
     if spec == "skewed":
         return skewed_trace(n, seed=seed)
     if spec == "skewed-het":
         return skewed_trace(n, seed=seed, max_step_mult=MAX_STEP_MULT)
+    if spec == "diurnal":
+        return diurnal_trace(n, seed=seed)
+    if isinstance(spec, str) and spec.endswith(".json"):
+        spec = load_trace(spec)
     if isinstance(spec, AvailabilityTrace):
         if spec.n != n:
             raise ValueError(

@@ -44,6 +44,49 @@ def check_weights(weights, n_updates: int):
             "equivalent, before aggregating)")
 
 
+def check_delta(delta, ref=None, *, ctx: str = "client delta"):
+    """Guard one client's update tree before it can touch the global
+    model: every float leaf must be finite (for QTensor leaves that is
+    the dequantization ``scales`` — int codes cannot encode NaN), and
+    with ``ref`` (the global trainable tree) given, the per-leaf shapes
+    must match it. A single NaN delta would poison the aggregated global
+    irreversibly (``aggregate`` sums it into every parameter), so this
+    fails loudly; the chaos schedulers call :func:`delta_ok` instead to
+    skip-and-ledger under ``ChaosConfig.tolerate_corrupt``."""
+    leaves = jax.tree_util.tree_leaves_with_path(
+        delta, is_leaf=lambda l: isinstance(l, QTensor))
+    if ref is not None:
+        ref_leaves = jax.tree_util.tree_leaves_with_path(ref)
+        if len(ref_leaves) != len(leaves):
+            raise ValueError(
+                f"{ctx}: tree has {len(leaves)} leaves, global trainable "
+                f"has {len(ref_leaves)}")
+        for (path, l), (_, rl) in zip(leaves, ref_leaves):
+            shape = tuple(l.orig_shape) if isinstance(l, QTensor) else \
+                tuple(np.shape(l))
+            if shape != tuple(np.shape(rl)):
+                raise ValueError(
+                    f"{ctx}: leaf {jax.tree_util.keystr(path)} has shape "
+                    f"{shape}, global trainable expects "
+                    f"{tuple(np.shape(rl))}")
+    for path, l in leaves:
+        arr = np.asarray(l.scales if isinstance(l, QTensor) else l)
+        if arr.dtype.kind == "f" and not np.all(np.isfinite(arr)):
+            raise ValueError(
+                f"{ctx}: non-finite values at "
+                f"{jax.tree_util.keystr(path)} — refusing to aggregate "
+                "a corrupt update into the global model")
+
+
+def delta_ok(delta, ref=None) -> bool:
+    """Tolerant form of :func:`check_delta` for skip-and-ledger paths."""
+    try:
+        check_delta(delta, ref)
+        return True
+    except ValueError:
+        return False
+
+
 def aggregate(global_trainable, updates: Sequence[Tuple[float, object]]):
     """updates: list of (m_i, delta tree) — m_i is the client sample
     count (plain FedAvg) or any non-negative importance mass (the async

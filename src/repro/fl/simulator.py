@@ -82,8 +82,14 @@ class FLConfig:
                                   # 0 = all active clients
     staleness_beta: float = 0.5   # async: w_i ∝ m_i (1+τ_i)^(-β)
     async_concurrency: int = 0    # async: clients in flight; 0 = 2K
-    trace: Any = None             # None|"uniform"|"skewed"|
-                                  # sched.AvailabilityTrace
+    trace: Any = None             # None|"uniform"|"skewed"|"diurnal"|
+                                  # path.json|sched.AvailabilityTrace
+    # chaos fault injection (fl.sched.chaos): None (fault-free) |
+    # preset name ("light"/"heavy") | sched.ChaosConfig
+    chaos: Any = None
+    # LRU bound on the shared program runtime's executable cache
+    # (0 = unbounded); only used when no runtime= is passed in
+    runtime_cache_entries: int = 0
 
 
 @dataclass
@@ -102,6 +108,12 @@ class History:
     participation: List[List[int]] = field(default_factory=list)
     staleness: List[List[int]] = field(default_factory=list)
     vtime: List[float] = field(default_factory=list)
+    # per committed round, per device class (trace.device_class):
+    # committed-update counts, mean staleness, mean client accuracy —
+    # the fairness/staleness/tail columns the chaos benchmarks read
+    class_counts: List[List[int]] = field(default_factory=list)
+    class_staleness: List[List[float]] = field(default_factory=list)
+    class_acc: List[List[float]] = field(default_factory=list)
     meta: Dict = field(default_factory=dict)
 
 
@@ -242,7 +254,24 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
     # runs — shape sweeps then share compiles): every fused program of
     # the cohort and fleet-GAN engines compiles through it, and meta
     # reports its unified n_compiles/compile-time breakdown
-    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime()
+    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime(
+        max_entries=cfg.runtime_cache_entries)
+
+    # chaos fault schedule: one deterministic ChaosSchedule per run,
+    # keyed off its own fold of the run seed (disjoint from the round /
+    # warmup / GAN streams), shared by the scheduler and both executors
+    chaos_cfg = sched_lib.resolve_chaos(cfg.chaos)
+    chaos_sched = None
+    if chaos_cfg is not None:
+        chaos_sched = sched_lib.ChaosSchedule(
+            chaos_cfg, jax.random.fold_in(rng, 5), trace)
+        # clients that drop between GAN launch and resolve lose their
+        # synthesized rebalancing rows; drawn once, engine-independent
+        gan_drop = chaos_sched.gan_dropouts() if strat.use_gan else None
+        if gan_drop is not None:
+            for i, c in enumerate(clients):
+                if gan_drop[i] and c.n >= strategies_lib.GAN_MIN_POOL:
+                    chaos_sched.ledger.gan_dropped += 1
 
     gan_meta: Dict[str, Any] = {}
     gan_job = None
@@ -254,6 +283,8 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
             rng, strategies_lib.GAN_RNG_OFFSET + i)
             for i in range(len(clients))]
         t0 = time.time()
+        gan_drop_pos = np.where(gan_drop)[0] if chaos_sched is not None \
+            and gan_drop is not None else np.zeros((0,), np.int64)
         if cfg.gan_engine == "fleet":
             if cfg.engine == "cohort":
                 # non-blocking launch: the GAN programs run while the
@@ -261,13 +292,17 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
                 # resolves the job into the staged features
                 gan_job = fleetgan.launch_gan_fleet(
                     clients, gan_keys, steps=cfg.gan_steps, runtime=rt)
+                gan_job.mark_dropped(gan_drop_pos)
             else:
-                gan_rep = fleetgan.prepare_gan_fleet(
+                job = fleetgan.launch_gan_fleet(
                     clients, gan_keys, steps=cfg.gan_steps, runtime=rt)
+                job.mark_dropped(gan_drop_pos)
+                gan_rep = job.resolve()
         elif cfg.gan_engine == "sequential":
             n_el = 0
             for i, c in enumerate(clients):
-                if c.n >= strategies_lib.GAN_MIN_POOL:
+                if c.n >= strategies_lib.GAN_MIN_POOL and \
+                        i not in set(int(p) for p in gan_drop_pos):
                     c.prepare_gan(gan_keys[i], steps=cfg.gan_steps)
                     n_el += 1
             gan_meta = {"gan_engine": "sequential",
@@ -285,7 +320,10 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
             clients=clients,
             cfg=cohort_lib.CohortConfig(
                 strategy=strat, local_steps=cfg.local_steps,
-                batch_size=cfg.batch_size, lr=cfg.lr),
+                batch_size=cfg.batch_size, lr=cfg.lr,
+                # chaos cut-step profiles are heterogeneous even on a
+                # homogeneous trace — compile the masked-scan variant
+                force_het=chaos_sched is not None),
             runtime=rt, gan_job=gan_job)
         executor = sched_lib.CohortExec(engine)
         if gan_job is not None:
@@ -345,12 +383,14 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
         clients_per_round=k_eff,
         staleness_beta=cfg.staleness_beta,
         concurrency=cfg.async_concurrency,
-        client_n=[c.n for c in clients])
+        client_n=[c.n for c in clients],
+        chaos=chaos_sched)
     hist.meta.update({
         "participation": sched.name,
         "clients_per_round": sched.k,
         "trace": trace.name,
         "staleness_beta": float(cfg.staleness_beta),
+        "device_classes": int(trace.n_device_classes),
     })
 
     # compile every fused program the policy dispatches before the clock
@@ -374,6 +414,8 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
     _compile_meta()
 
     cids = np.asarray([c.cid for c in clients])
+    n_dc = int(trace.n_device_classes)
+    dclass = np.asarray(trace.device_class, np.int64)
     for rnd in range(cfg.rounds):
         t0 = time.time()
         key = jax.random.fold_in(jax.random.fold_in(rng, 3), rnd)
@@ -385,6 +427,21 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
             [int(cids[p]) for p in m["participation"]])
         hist.staleness.append([int(s) for s in m["staleness"]])
         hist.vtime.append(float(m["vtime"]))
+        # per-device-class fairness columns, from the committed updates
+        # (positions, so the trace's device_class vector indexes them)
+        pos = np.asarray(m["participation"], np.int64)
+        stal = np.asarray(m["staleness"], np.float64)
+        accs = np.asarray(m["acc"], np.float64)
+        counts, c_stal, c_acc = [], [], []
+        for d in range(n_dc):
+            in_d = dclass[pos] == d if len(pos) else np.zeros(0, bool)
+            k_d = int(in_d.sum())
+            counts.append(k_d)
+            c_stal.append(float(stal[in_d].mean()) if k_d else 0.0)
+            c_acc.append(float(accs[in_d].mean()) if k_d else 0.0)
+        hist.class_counts.append(counts)
+        hist.class_staleness.append(c_stal)
+        hist.class_acc.append(c_acc)
         hist.round_time_s.append(time.time() - t0)
         # measured footprint constant (Fig. 3) — deterministic, no
         # synthetic wiggle
@@ -400,4 +457,30 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
     # width bucket mid-run (async back-fill at a fresh width) must show
     # up in the reported counts
     _compile_meta()
+    hist.meta["n_cache_evictions"] = int(rt.n_evictions)
+    if chaos_sched is not None:
+        import dataclasses as _dc
+        hist.meta["chaos"] = _dc.asdict(chaos_cfg)
+        hist.meta["fault_ledger"] = chaos_sched.ledger.as_dict()
+        # per-class fairness summary over the whole run: participation
+        # share vs population share, mean staleness, mean client acc
+        tot = np.asarray(hist.class_counts, np.float64).sum(0)
+        report = []
+        for d in range(n_dc):
+            k_d = float(tot[d])
+            s_col = [s[d] for s, c in
+                     zip(hist.class_staleness, hist.class_counts)
+                     if c[d] > 0]
+            a_col = [a[d] for a, c in
+                     zip(hist.class_acc, hist.class_counts) if c[d] > 0]
+            report.append({
+                "device_class": d,
+                "population_share": float((dclass == d).mean()),
+                "participation_share": float(
+                    k_d / max(tot.sum(), 1.0)),
+                "mean_staleness": float(np.mean(s_col)) if s_col
+                else 0.0,
+                "mean_client_acc": float(np.mean(a_col)) if a_col
+                else 0.0})
+        hist.meta["device_class_report"] = report
     return hist

@@ -1,0 +1,740 @@
+"""Chaos layer (fl.sched.chaos): deterministic fault schedules,
+partial-work recovery, lost/corrupt uplinks with bounded retry, fused
+vs sequential parity under chaos, LRU runtime eviction, trace realism
+(diurnal cycle + JSON replay), and the run_federated acceptance
+scenario (bit-determinism, fault ledger, zero extra compiles).
+
+Bitwise discipline: fault schedules (draw vectors, cut points, dark
+windows, loss/corruption indicators) are pure functions of (chaos key,
+fault tag, client position) and asserted bitwise; trained values that
+flow through the fused engines are pinned at the usual 5e-4/1e-3
+parity tolerances (XLA fusion is not bitwise-stable across loop->scan
+restructuring).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clip as clip_lib
+from repro.core import gan as gan_lib
+from repro.core import optim
+from repro.core.quant import quantize_tree
+from repro.data.synthetic import class_tokens, make_dataset
+from repro.fl import client as client_lib
+from repro.fl import cohort as cohort_lib
+from repro.fl import fleetgan, server
+from repro.fl import sched as sched_lib
+from repro.fl.runtime import ProgramRuntime
+from repro.fl.sched import chaos as chaos_lib
+from repro.fl import partition
+from repro.fl.strategies import GAN_MIN_POOL, STRATEGIES
+
+N_CLIENTS = 4
+STEPS, BATCH, LR = 4, 8, 3e-3
+
+_SETUPS = {}
+
+
+def _setup(arm="fedclip"):
+    """Small FL instance with both executors over shared clients; the
+    engine stages the masked (force_het) programs chaos cut profiles
+    dispatch."""
+    if arm in _SETUPS:
+        return _SETUPS[arm]
+    strat = STRATEGIES[arm]
+    ccfg = clip_lib.CLIPConfig()
+    frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+    data = make_dataset("pacs", n_per_class=14, seed=0,
+                        longtail_gamma=4.0)
+    spec = data["spec"]
+    class_emb = clip_lib.text_embedding(
+        frozen, ccfg,
+        jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+    parts = partition.dirichlet_partition(data["labels"], N_CLIENTS,
+                                          0.5, seed=0)
+    clients = [client_lib.Client(
+        cid=i, images=data["images"][idx], labels=data["labels"][idx],
+        n_classes=spec.n_classes, strategy=strat)
+        for i, idx in enumerate(parts)]
+    global_tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg,
+                                          strat)
+    engine = cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(strategy=strat, local_steps=STEPS,
+                                    batch_size=BATCH, lr=LR,
+                                    donate=False, force_het=True))
+    out = dict(
+        strat=strat, ccfg=ccfg, frozen=frozen, class_emb=class_emb,
+        clients=clients, global_tr=global_tr, engine=engine,
+        cohort_exec=sched_lib.CohortExec(engine),
+        seq_exec=sched_lib.SequentialExec(
+            clients=clients, frozen=frozen, ccfg=ccfg,
+            class_emb=class_emb, local_steps=STEPS, batch_size=BATCH,
+            lr=LR))
+    _SETUPS[arm] = out
+    return out
+
+
+def _trace(n=N_CLIENTS):
+    return sched_lib.uniform_trace(n)
+
+
+def _chaos(trace, seed=0, **kw):
+    return sched_lib.ChaosSchedule(sched_lib.ChaosConfig(**kw),
+                                   jax.random.PRNGKey(seed), trace)
+
+
+def _assert_tree_close(a, b, atol, msg=""):
+    flat_b = dict((jax.tree_util.keystr(p), l) for p, l in
+                  jax.tree_util.tree_leaves_with_path(b))
+    for p, leaf in jax.tree_util.tree_leaves_with_path(a):
+        np.testing.assert_allclose(
+            np.asarray(leaf),
+            np.asarray(flat_b[jax.tree_util.keystr(p)]),
+            atol=atol, rtol=0, err_msg=f"{msg}{jax.tree_util.keystr(p)}")
+
+
+# -- config + schedule determinism --------------------------------------
+
+def test_chaos_config_validation_and_presets():
+    with pytest.raises(ValueError):
+        sched_lib.ChaosConfig(dropout_prob=1.5)
+    with pytest.raises(ValueError):
+        sched_lib.ChaosConfig(unavail_len=0)
+    with pytest.raises(ValueError):
+        sched_lib.ChaosConfig(max_retries=0)
+    with pytest.raises(ValueError):
+        sched_lib.ChaosConfig(retry_backoff=0.0)
+    with pytest.raises(ValueError):
+        sched_lib.ChaosConfig(class_mult=(1.0, -2.0))
+    assert sched_lib.resolve_chaos(None) is None
+    assert sched_lib.resolve_chaos("light").dropout_prob == 0.1
+    cfg = sched_lib.ChaosConfig(dropout_prob=0.2)
+    assert sched_lib.resolve_chaos(cfg) is cfg
+    with pytest.raises(ValueError, match="preset"):
+        sched_lib.resolve_chaos("cataclysmic")
+    with pytest.raises(ValueError):
+        sched_lib.resolve_chaos(42)
+
+
+def test_fault_schedule_is_population_shaped_and_deterministic():
+    """Fault draws are functions of (key, tag, client position) alone:
+    the same client sees the same fault regardless of who else is in
+    the cohort (draws happen at the true population shape — threefry is
+    not shape-stable — and cohorts index the vector), and two schedules
+    built from the same (cfg, key, trace) agree bitwise."""
+    tr = _trace(8)
+    a = _chaos(tr, seed=7, dropout_prob=0.5, straggler_sigma=0.4,
+               uplink_loss_prob=0.5, corrupt_prob=0.5)
+    b = _chaos(tr, seed=7, dropout_prob=0.5, straggler_sigma=0.4,
+               uplink_loss_prob=0.5, corrupt_prob=0.5)
+    full_steps = np.full(8, 6, np.int64)
+    cut_a, drop_a = a.cut_steps(3, np.arange(8), full_steps)
+    cut_b, drop_b = b.cut_steps(3, np.arange(8), full_steps)
+    np.testing.assert_array_equal(cut_a, cut_b)
+    np.testing.assert_array_equal(drop_a, drop_b)
+    # sub-cohort draws index the same population vector
+    sub = np.array([1, 5, 6])
+    cut_s, drop_s = a.cut_steps(3, sub, full_steps[sub])
+    np.testing.assert_array_equal(cut_s, cut_a[sub])
+    np.testing.assert_array_equal(drop_s, drop_a[sub])
+    np.testing.assert_array_equal(a.straggler_mult(2, sub),
+                                  b.straggler_mult(2, np.arange(8))[sub])
+    for cid in range(8):
+        assert a.uplink_lost(4, cid, 0) == b.uplink_lost(4, cid, 0)
+        assert a.corrupt_uplink(4, cid) == b.corrupt_uplink(4, cid)
+
+
+def test_cut_steps_bounds_and_single_step_clients():
+    tr = _trace(16)
+    ch = _chaos(tr, dropout_prob=1.0)
+    full = np.full(16, 6, np.int64)
+    cut, dropped = ch.cut_steps(0, np.arange(16), full)
+    assert dropped.all()
+    assert (cut >= 1).all() and (cut <= 5).all()
+    # a 1-step client cannot drop mid-round (no prior step to cut at)
+    cut1, drop1 = ch.cut_steps(0, np.arange(16), np.ones(16, np.int64))
+    assert not drop1.any() and (cut1 == 1).all()
+    # fault-free config: identity
+    ch0 = _chaos(tr, dropout_prob=0.0)
+    cut0, drop0 = ch0.cut_steps(0, np.arange(16), full)
+    np.testing.assert_array_equal(cut0, full)
+    assert not drop0.any()
+
+
+def test_dark_windows_persist_and_cache():
+    tr = _trace(64)
+    ch = _chaos(tr, unavail_prob=0.3, unavail_len=3)
+    starts = {r: np.asarray(ch._u(chaos_lib._DARK_TAG, r)) < 0.3
+              for r in range(8)}
+    for rnd in range(5, 8):
+        expect = np.zeros(64, bool)
+        for r in range(rnd - 2, rnd + 1):
+            expect |= starts[r]
+        np.testing.assert_array_equal(ch.dark_mask(rnd), expect)
+        # cached: repeat queries agree bitwise
+        np.testing.assert_array_equal(ch.dark_mask(rnd),
+                                      ch.dark_mask(rnd))
+    assert not _chaos(tr, unavail_prob=0.0).dark_mask(3).any()
+
+
+def test_uplink_loss_is_bounded_by_max_retries():
+    tr = _trace(8)
+    ch = _chaos(tr, uplink_loss_prob=1.0, max_retries=3)
+    for cid in range(8):
+        assert ch.uplink_lost(0, cid, 0)
+        assert ch.uplink_lost(0, cid, 2)
+        # the attempt at max_retries always delivers: retries bound
+        # delay, never liveness
+        assert not ch.uplink_lost(0, cid, 3)
+        assert not ch.uplink_lost(0, cid, 7)
+
+
+# -- corrupt deltas + server guard --------------------------------------
+
+def test_corrupt_delta_and_check_delta_guard():
+    """Regression: a single NaN delta poisons the aggregated global
+    irreversibly — check_delta must catch it before aggregation, on
+    plain and quantized trees alike."""
+    g = {"w": jnp.zeros((4,)), "b": jnp.zeros((2,))}
+    d = {"w": jnp.ones((4,)), "b": jnp.ones((2,))}
+    bad = chaos_lib.corrupt_delta(d)
+    # exactly one leaf poisoned, treedef/shape preserved
+    assert jax.tree.structure(bad) == jax.tree.structure(d)
+    nan_leaves = [l for l in jax.tree.leaves(bad)
+                  if np.any(np.isnan(np.asarray(l)))]
+    assert len(nan_leaves) == 1
+    # without the guard, aggregation poisons the global model
+    poisoned = server.aggregate(g, [(1.0, bad), (1.0, d)])
+    assert any(np.any(np.isnan(np.asarray(l)))
+               for l in jax.tree.leaves(poisoned))
+    # the guard: loud in strict mode, boolean for skip-and-ledger
+    assert server.delta_ok(d, g)
+    assert not server.delta_ok(bad, g)
+    with pytest.raises(ValueError, match="non-finite"):
+        server.check_delta(bad, g, ctx="client 0 delta")
+    # shape mismatches against the global trainable also fail loudly
+    with pytest.raises(ValueError, match="shape"):
+        server.check_delta({"w": jnp.ones((5,)), "b": jnp.ones((2,))}, g)
+    with pytest.raises(ValueError, match="leaves"):
+        server.check_delta({"w": jnp.ones((4,))}, g)
+    # quantized tree: the poison lands in the dequantization scales
+    q = quantize_tree({"w": jnp.ones((64, 64))}, bits=8, mode="int",
+                      block=64, min_size=0)
+    qbad = chaos_lib.corrupt_delta(q)
+    assert np.all(np.isnan(np.asarray(qbad["w"].scales)))
+    assert not server.delta_ok(qbad)
+    with pytest.raises(ValueError, match="no float leaf"):
+        chaos_lib.corrupt_delta({"i": jnp.ones((3,), jnp.int32)})
+
+
+# -- partial-work recovery property (masked scans) ----------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 6), st.integers(0, 2 ** 16))
+def test_cut_at_s_is_bitwise_running_s_steps_adam(s, seed):
+    """optim.step_mask recovery contract: a fixed-length masked
+    adam_scan cut at step s is bitwise a scan of exactly s steps —
+    params, both Adam moments, and the step counter."""
+    S = 6
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (5,))}
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (S, 5))
+
+    def grad_fn(p, x):
+        g = jax.grad(lambda q: jnp.sum((q["w"] - x) ** 2))(p)
+        return g, 0.0
+
+    p_cut, s_cut, _ = optim.adam_scan(
+        grad_fn, params, optim.adam_init(params), xs, lr=0.1,
+        active=optim.step_mask(s, S))
+    p_ref, s_ref, _ = optim.adam_scan(
+        grad_fn, params, optim.adam_init(params), xs[:s], lr=0.1)
+    for a, b in zip(jax.tree.leaves((p_cut, s_cut)),
+                    jax.tree.leaves((p_ref, s_ref))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 4), st.integers(0, 2 ** 16))
+def test_cut_at_s_is_running_s_steps_gan(s, seed):
+    """The same recovery contract for the bucketed GAN scan the fleet
+    engine dispatches.  Within one compiled program, masked tail steps
+    are bitwise no-ops — garbage tail inputs cannot leak into params or
+    either Adam state.  Across programs (fixed-length masked scan vs a
+    genuinely shorter scan) the conv stacks compile separately, so the
+    cross-check is allclose at float32 noise rather than bitwise."""
+    S, B, n_true = 4, 8, 5
+    cfg = gan_lib.GANConfig(n_classes=3, z_dim=8, g_dim=8, d_dim=8)
+    key = jax.random.PRNGKey(seed)
+    params = gan_lib.init_gan(key, cfg)
+    opt = {"gen": optim.adam_init(params["gen"]),
+           "disc": optim.adam_init(params["disc"])}
+    images = jax.random.normal(jax.random.fold_in(key, 1),
+                               (16, 32, 32, 3))
+    labels = jnp.zeros((16,), jnp.int32)
+    idx = jax.random.randint(jax.random.fold_in(key, 2), (S, B), 0, 16)
+    z = jax.random.normal(jax.random.fold_in(key, 3), (S, B, cfg.z_dim))
+    z2 = jax.random.normal(jax.random.fold_in(key, 4),
+                           (S, B, cfg.z_dim))
+    mask = optim.step_mask(s, S)
+    out_cut = gan_lib.gan_scan_bucketed(
+        params, opt, cfg, images, labels, idx, z, z2, n_true,
+        active=mask)
+    # same program, garbage beyond the cut: bitwise identical
+    garb = jnp.where(mask[:, None, None], z, 1e6)
+    out_garb = gan_lib.gan_scan_bucketed(
+        params, opt, cfg, images, labels, idx, garb,
+        jnp.where(mask[:, None, None], z2, -1e6), n_true, active=mask)
+    for a, b in zip(jax.tree.leaves(out_cut[:2]),
+                    jax.tree.leaves(out_garb[:2])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # separately compiled shorter scan: same math, float32 noise only
+    out_ref = gan_lib.gan_scan_bucketed(
+        params, opt, cfg, images, labels, idx[:s], z[:s], z2[:s],
+        n_true)
+    for a, b in zip(jax.tree.leaves(out_cut[:2]),
+                    jax.tree.leaves(out_ref[:2])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-6, atol=1e-8)
+
+
+# -- scheduler-level chaos: parity, proration, retries ------------------
+
+_CHAOS_KW = dict(dropout_prob=0.6, straggler_sigma=0.4,
+                 uplink_loss_prob=0.4, corrupt_prob=0.0, max_retries=2)
+
+
+def test_sync_partial_chaos_fused_matches_sequential_oracle():
+    """Both executors under one fault schedule: same participation,
+    same fault ledger, same uplink bytes, matching globals — the
+    sequential loop honors the cut-step schedule by simply running
+    fewer steps, the fused engine by masking its fixed-length scan."""
+    s = _setup("fedclip")
+    tr = _trace()
+
+    def run(ex):
+        ch = _chaos(tr, seed=11, **_CHAOS_KW)
+        sched = sched_lib.SyncPartialScheduler(
+            executor=ex, trace=tr, local_steps=STEPS,
+            clients_per_round=2, chaos=ch)
+        g = s["global_tr"]
+        log = []
+        for rnd in range(3):
+            g, m = sched.step(g, rnd, jax.random.PRNGKey(rnd))
+            log.append((list(m["participation"]), m["vtime"],
+                        int(m["uplink_bytes"]), list(m["loss"])))
+        return g, log, ch.ledger.as_dict()
+
+    gc, log_c, led_c = run(s["cohort_exec"])
+    gs, log_s, led_s = run(s["seq_exec"])
+    assert led_c == led_s
+    assert led_c["n_dropped"] > 0 or led_c["uplinks_lost"] > 0
+    for (pc, vc, bc, lc), (ps, vs, bs, ls) in zip(log_c, log_s):
+        assert pc == ps
+        assert vc == vs
+        assert bc == bs
+        np.testing.assert_allclose(lc, ls, atol=1e-3, rtol=1e-4)
+    _assert_tree_close(gc, gs, atol=5e-4, msg="sync chaos ")
+
+
+def test_full_sync_chaos_parity_and_dark_windows():
+    s = _setup("fedclip")
+    tr = _trace()
+
+    def run(ex):
+        ch = _chaos(tr, seed=5, dropout_prob=0.5, unavail_prob=0.4,
+                    unavail_len=1)
+        sched = sched_lib.FullSyncScheduler(
+            executor=ex, trace=tr, local_steps=STEPS, chaos=ch)
+        g = s["global_tr"]
+        parts = []
+        for rnd in range(2):
+            g, m = sched.step(g, rnd, jax.random.PRNGKey(rnd))
+            parts.append(list(m["participation"]))
+        return g, parts, ch.ledger.as_dict()
+
+    gc, pc, led_c = run(s["cohort_exec"])
+    gs, ps, led_s = run(s["seq_exec"])
+    assert pc == ps and led_c == led_s
+    assert led_c["n_dropped"] + led_c["client_rounds_dark"] > 0
+    _assert_tree_close(gc, gs, atol=5e-4, msg="full chaos ")
+
+
+def test_async_chaos_determinism_and_parity():
+    """Async under chaos: bit-deterministic across runs (event order,
+    retry backoff on the virtual clock, staleness) and fused ==
+    sequential on participation, ledger, and globals."""
+    s = _setup("fedclip")
+    tr = _trace()
+
+    def run(ex):
+        ch = _chaos(tr, seed=3, dropout_prob=0.4, straggler_sigma=0.5,
+                    uplink_loss_prob=0.5, max_retries=2)
+        sched = sched_lib.AsyncBufferedScheduler(
+            executor=ex, trace=tr, local_steps=STEPS,
+            clients_per_round=1, staleness_beta=0.5, concurrency=2,
+            client_n=[c.n for c in s["clients"]], chaos=ch)
+        g = s["global_tr"]
+        log = []
+        for rnd in range(4):
+            g, m = sched.step(g, rnd, jax.random.PRNGKey(rnd))
+            log.append((list(m["participation"]), list(m["staleness"]),
+                        m["vtime"], int(m["uplink_bytes"])))
+        return g, log, ch.ledger.as_dict()
+
+    g1, log1, led1 = run(s["cohort_exec"])
+    g2, log2, led2 = run(s["cohort_exec"])
+    assert log1 == log2 and led1 == led2
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    gs, log_s, led_s = run(s["seq_exec"])
+    assert [l[:3] for l in log_s] == [l[:3] for l in log1]
+    assert led_s == led1
+    assert led1["uplinks_lost"] > 0 and led1["n_retries"] > 0
+    # retried deliveries consumed real uplink: bytes exceed the
+    # fault-free per-commit payload at least once
+    _assert_tree_close(g1, gs, atol=5e-4, msg="async chaos ")
+
+
+def test_sync_chaos_commit_weights_are_prorated():
+    """A dropped client's delta commits with mass scaled by its
+    completed-step fraction: the chaos step must equal a hand-built
+    wave + commit_buffer with cut/full-prorated, renormalized masses."""
+    s = _setup("fedclip")
+    tr = _trace()
+    key = jax.random.PRNGKey(21)
+    kw = dict(dropout_prob=0.7)
+    sched = sched_lib.SyncPartialScheduler(
+        executor=s["cohort_exec"], trace=tr, local_steps=STEPS,
+        clients_per_round=3, chaos=_chaos(tr, seed=9, **kw))
+    got, m = sched.step(s["global_tr"], 0, key)
+    # replay the same schedule by hand
+    ch = _chaos(tr, seed=9, **kw)
+    sched2 = sched_lib.SyncPartialScheduler(
+        executor=s["cohort_exec"], trace=tr, local_steps=STEPS,
+        clients_per_round=3, chaos=ch)
+    cohort = sched2.select(0, key)
+    full = np.asarray(cohort.n_steps, np.int64)
+    cut, dropped = ch.cut_steps(0, cohort.sel, full)
+    assert dropped.any(), "p=0.7 over 3 clients should drop someone"
+    deltas, _ = s["cohort_exec"].run_wave(
+        s["global_tr"],
+        sched_lib.Cohort(cohort.sel, cut.astype(np.int32),
+                         cohort.staleness), key)
+    w = s["cohort_exec"].client_masses()[cohort.sel] * (cut / full)
+    w = (w / w.sum()).astype(np.float32)
+    ref = s["cohort_exec"].commit_buffer(s["global_tr"], w, deltas)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert list(m["participation"]) == list(cohort.sel)
+
+
+def test_sync_lost_uplink_retries_next_round_and_delivers():
+    """uplink_loss_prob=1, max_retries=2: every client loses attempts 0
+    and 1 (re-selected first each next round, nothing committed), and
+    the attempt at max_retries is forced through — bounded retry can
+    delay a commit, never starve it."""
+    s = _setup("fedclip")
+    tr = _trace()
+    ch = _chaos(tr, seed=1, uplink_loss_prob=1.0, max_retries=2)
+    sched = sched_lib.SyncPartialScheduler(
+        executor=s["cohort_exec"], trace=tr, local_steps=STEPS,
+        clients_per_round=2, chaos=ch)
+    g = s["global_tr"]
+    parts = []
+    for rnd in range(3):
+        g, m = sched.step(g, rnd, jax.random.PRNGKey(rnd))
+        parts.append(list(m["participation"]))
+    assert parts[0] == [] and parts[1] == []
+    assert ch.ledger.commits_skipped == 2
+    assert len(parts[2]) == 2            # forced delivery at attempt 2
+    assert ch.ledger.uplinks_lost == 4   # 2 clients x 2 lost attempts
+    assert ch.ledger.n_retries == 4      # both re-selected twice
+    # the global model only moved on the delivering round
+    assert any((np.asarray(a) != np.asarray(b)).any() for a, b in
+               zip(jax.tree.leaves(g), jax.tree.leaves(s["global_tr"])))
+
+
+def test_strict_mode_raises_on_corrupt_uplink():
+    s = _setup("fedclip")
+    tr = _trace()
+    ch = _chaos(tr, seed=2, corrupt_prob=1.0, tolerate_corrupt=False)
+    sched = sched_lib.SyncPartialScheduler(
+        executor=s["cohort_exec"], trace=tr, local_steps=STEPS,
+        clients_per_round=2, chaos=ch)
+    with pytest.raises(ValueError, match="non-finite"):
+        sched.step(s["global_tr"], 0, jax.random.PRNGKey(0))
+    # tolerant mode skips-and-ledgers the same faults
+    ch2 = _chaos(tr, seed=2, corrupt_prob=1.0, tolerate_corrupt=True)
+    sched2 = sched_lib.SyncPartialScheduler(
+        executor=s["cohort_exec"], trace=tr, local_steps=STEPS,
+        clients_per_round=2, chaos=ch2)
+    g, m = sched2.step(s["global_tr"], 0, jax.random.PRNGKey(0))
+    assert ch2.ledger.deltas_corrupt == 2
+    assert ch2.ledger.deltas_skipped == 2
+    assert ch2.ledger.commits_skipped == 1
+    assert list(m["participation"]) == []
+    for a, b in zip(jax.tree.leaves(g),
+                    jax.tree.leaves(s["global_tr"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- runtime LRU --------------------------------------------------------
+
+def test_runtime_lru_eviction_is_bounded_and_ledgered():
+    rt = ProgramRuntime(max_entries=2)
+    build = lambda: (lambda x: x * 2.0)
+    a, b, c = (jnp.ones((4,)),), (jnp.ones((8,)),), (jnp.ones((16,)),)
+    rt.run("k", build, a)
+    rt.run("k", build, b)
+    assert rt.n_compiles == 2 and rt.n_evictions == 0
+    rt.run("k", build, a)                 # hit: refreshes a's recency
+    assert rt.n_compiles == 2
+    rt.run("k", build, c)                 # evicts b (LRU), not a
+    assert rt.n_evictions == 1
+    rt.run("k", build, a)                 # still cached
+    assert rt.n_compiles == 3
+    rt.run("k", build, b)                 # recompiles, evicts again
+    assert rt.n_compiles == 4 and rt.n_evictions == 2
+    assert rt.stats()["k"]["n_evicted"] == 2
+    # unbounded runtime never evicts; negative bound is rejected
+    rt0 = ProgramRuntime()
+    for args in (a, b, c):
+        rt0.run("k", build, args)
+    assert rt0.n_evictions == 0
+    with pytest.raises(ValueError):
+        ProgramRuntime(max_entries=-1)
+
+
+# -- traces: diurnal realism + JSON replay ------------------------------
+
+def test_diurnal_trace_cycles_and_roundtrips(tmp_path):
+    tr = sched_lib.diurnal_trace(12, seed=4)
+    tr2 = sched_lib.diurnal_trace(12, seed=4)
+    np.testing.assert_array_equal(tr.availability, tr2.availability)
+    np.testing.assert_array_equal(tr.device_class, tr2.device_class)
+    assert tr.n_device_classes == 3
+    # the cycle modulates availability but keeps it strictly positive
+    a0, a12 = tr.availability_at(0.0), tr.availability_at(12.0)
+    assert not np.allclose(a0, a12)
+    for t in (0.0, 6.0, 12.0, 18.0):
+        assert (tr.availability_at(t) > 0).all()
+        np.testing.assert_allclose(tr.selection_probs(t).sum(), 1.0,
+                                   rtol=1e-12)
+    # static traces are inert under the time argument
+    u = sched_lib.uniform_trace(4)
+    np.testing.assert_array_equal(u.availability_at(0.0),
+                                  u.availability_at(99.0))
+    # JSON replay: save -> load -> identical schedule inputs
+    p = tmp_path / "trace.json"
+    sched_lib.save_trace(tr, p)
+    lt = sched_lib.load_trace(p)
+    for f in ("availability", "speed", "step_mult", "device_class",
+              "phase"):
+        np.testing.assert_array_equal(getattr(lt, f), getattr(tr, f))
+    assert lt.period == tr.period and lt.amplitude == tr.amplitude
+    assert sched_lib.resolve_trace(str(p), 12).n == 12
+    assert sched_lib.resolve_trace("diurnal", 6).n_device_classes >= 1
+    with pytest.raises(ValueError):
+        sched_lib.resolve_trace(str(p), 5)    # wrong population
+    with pytest.raises(ValueError):           # amplitude >= 1 degenerate
+        sched_lib.AvailabilityTrace(
+            availability=np.ones(2), speed=np.ones(2),
+            step_mult=np.ones(2, np.int32), amplitude=1.0, period=10.0)
+
+
+# -- fleet-GAN drop between launch and resolve --------------------------
+
+def _gan_clients(sizes, *, seed=0):
+    strat = STRATEGIES["tripleplay"]
+    data = make_dataset("pacs", n_per_class=30, seed=seed,
+                        longtail_gamma=4.0)
+    spec = data["spec"]
+    out, start = [], 0
+    for i, n in enumerate(sizes):
+        sl = slice(start, start + n)
+        start += n
+        out.append(client_lib.Client(
+            cid=i, images=data["images"][sl],
+            labels=data["labels"][sl], n_classes=spec.n_classes,
+            strategy=strat))
+    return out
+
+
+def test_fleetgan_mark_dropped_discards_undelivered_work():
+    """A client that drops between GAN launch and resolve gets nothing
+    written back — no trained params, no synthesized rebalancing rows —
+    exactly as if it vanished before uploading; survivors and the
+    report are unaffected except for the n_dropped count."""
+    clients = _gan_clients([GAN_MIN_POOL + 6, GAN_MIN_POOL + 4, 4])
+    keys = [jax.random.PRNGKey(100 + i) for i in range(len(clients))]
+    job = fleetgan.launch_gan_fleet(clients, keys, steps=20)
+    assert len(job.need.get(1, ())) > 0, "long-tail shard needs synth"
+    job.mark_dropped([1])
+    rep = job.resolve()
+    assert rep.n_dropped == 1
+    assert clients[1].gan_params is None
+    assert clients[1].aug_images is None
+    assert clients[0].gan_params is not None
+    assert clients[0].aug_images is not None
+    assert 1 not in rep.d_loss
+    with pytest.raises(RuntimeError, match="resolved"):
+        job.mark_dropped([0])
+
+
+def test_cohort_engine_shrinks_pool_for_gan_dropped_client():
+    """The padded pool layout reserves synth slots at launch; a dropped
+    client's lens must shrink back to its raw pool so the zero-feature
+    reserved rows are never sampled — and the fused round then matches
+    the sequential oracle whose dropped client simply never ran
+    prepare_gan."""
+    ccfg = clip_lib.CLIPConfig()
+    frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+    clients = _gan_clients([GAN_MIN_POOL + 6, GAN_MIN_POOL + 4], seed=1)
+    spec_classes = clients[0].n_classes
+    class_emb = clip_lib.text_embedding(
+        frozen, ccfg, jnp.asarray(class_tokens(
+            make_dataset("pacs", n_per_class=2, seed=0)["spec"],
+            np.arange(spec_classes))))
+    keys = [jax.random.PRNGKey(200 + i) for i in range(len(clients))]
+    job = fleetgan.launch_gan_fleet(clients, keys, steps=20)
+    need1 = len(job.need.get(1, ()))
+    assert need1 > 0
+    job.mark_dropped([1])
+    strat = STRATEGIES["tripleplay"]
+    engine = cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(strategy=strat, local_steps=STEPS,
+                                    batch_size=BATCH, lr=LR,
+                                    donate=False),
+        gan_job=job)
+    lens = np.asarray(engine.lens)
+    assert lens[1] == clients[1].n                  # shrunk to raw pool
+    assert lens[0] == clients[0].n + len(job.need[0])
+    # parity: the sequential pool for the dropped client is its raw data
+    global_tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg,
+                                          strat)
+    key = jax.random.PRNGKey(33)
+    new_c, mc = engine.run_round(global_tr, key)
+    idx = cohort_lib.round_indices(key, np.asarray(engine.lens), STEPS,
+                                   BATCH)
+    updates, oloss = [], []
+    for i, c in enumerate(clients):
+        tr_after, m = c.local_train(frozen, global_tr, class_emb, ccfg,
+                                    steps=STEPS, batch_size=BATCH,
+                                    lr=LR, indices=idx[i])
+        upd, _ = c.make_update(global_tr, tr_after)
+        updates.append((c.n, upd))
+        oloss.append(m["loss"])
+    ref = server.aggregate(global_tr, updates)
+    np.testing.assert_allclose(mc["loss"], oloss, atol=1e-3, rtol=1e-4)
+    _assert_tree_close(new_c, ref, atol=5e-4, msg="gan-drop ")
+
+
+# -- simulator acceptance ----------------------------------------------
+
+_ACC_CFG = dict(
+    dataset="pacs", strategy="fedclip", n_clients=4, rounds=3,
+    local_steps=3, n_per_class=12, batch_size=8, lr=3e-3,
+    participation="sync-partial", clients_per_round=2, trace="skewed",
+    chaos=sched_lib.ChaosConfig(dropout_prob=0.5, straggler_sigma=0.5,
+                                uplink_loss_prob=0.5, max_retries=2))
+
+
+def test_run_federated_chaos_is_bit_deterministic_no_extra_compiles():
+    """The acceptance scenario: a seeded chaos run (>=20% dropout +
+    lognormal stragglers + lost uplinks) is bit-deterministic across
+    two runs, reports a non-empty fault ledger, and compiles exactly
+    one wave program — chaos adds zero program kinds beyond the
+    existing width/step-profile buckets (no subset_round, no silent
+    fault-free fallback)."""
+    from repro.fl.simulator import FLConfig, run_federated
+    h1 = run_federated(FLConfig(**_ACC_CFG))
+    h2 = run_federated(FLConfig(**_ACC_CFG))
+    assert h1.participation == h2.participation
+    assert h1.vtime == h2.vtime
+    assert h1.client_loss == h2.client_loss
+    assert h1.server_acc == h2.server_acc
+    assert h1.uplink_bytes == h2.uplink_bytes
+    assert h1.meta["fault_ledger"] == h2.meta["fault_ledger"]
+    led = h1.meta["fault_ledger"]
+    assert sum(led.values()) > 0, "chaos run took the fault-free path"
+    assert led["uplinks_lost"] > 0 or led["n_dropped"] > 0
+    kinds = h1.meta["n_compiles_by_kind"]
+    assert kinds.get("wave_round", 0) == 1
+    assert "subset_round" not in kinds
+    assert h1.meta["chaos"]["dropout_prob"] == 0.5
+    # vtime advances by the straggler-stretched barrier each round
+    assert all(b > a for a, b in zip(h1.vtime, h1.vtime[1:]))
+    assert h1.meta["n_cache_evictions"] == 0
+
+
+def test_run_federated_chaos_engines_agree():
+    """End-to-end satellite parity: cohort vs sequential engine under
+    one chaos seed produce the same participation, fault ledger, and
+    matching client losses."""
+    from repro.fl.simulator import FLConfig, run_federated
+    hc = run_federated(FLConfig(**dict(_ACC_CFG, engine="cohort")))
+    hs = run_federated(FLConfig(**dict(_ACC_CFG, engine="sequential")))
+    assert hc.participation == hs.participation
+    assert hc.meta["fault_ledger"] == hs.meta["fault_ledger"]
+    assert hc.uplink_bytes == hs.uplink_bytes
+    for lc, ls in zip(hc.client_loss, hs.client_loss):
+        np.testing.assert_allclose(lc, ls, atol=1e-3, rtol=1e-4)
+
+
+def test_history_device_class_columns_and_report():
+    """Diurnal trace + async chaos: History carries per-device-class
+    participation/staleness/accuracy columns every round, and meta
+    summarizes population vs participation share per class."""
+    from repro.fl.simulator import FLConfig, run_federated
+    h = run_federated(FLConfig(
+        dataset="pacs", strategy="fedclip", n_clients=5, rounds=3,
+        local_steps=3, n_per_class=12, batch_size=8, lr=3e-3,
+        participation="async", clients_per_round=1,
+        async_concurrency=2, trace="diurnal",
+        chaos=sched_lib.ChaosConfig(straggler_sigma=0.5,
+                                    uplink_loss_prob=0.4,
+                                    max_retries=2,
+                                    class_mult=(1.0, 2.0, 4.0))))
+    n_dc = h.meta["device_classes"]
+    assert n_dc >= 1
+    assert len(h.class_counts) == 3
+    assert all(len(row) == n_dc for row in h.class_counts)
+    assert all(len(row) == n_dc for row in h.class_staleness)
+    assert all(len(row) == n_dc for row in h.class_acc)
+    # every committed update is attributed to exactly one class
+    for counts, parts in zip(h.class_counts, h.participation):
+        assert sum(counts) == len(parts)
+    rep = h.meta["device_class_report"]
+    assert len(rep) == n_dc
+    np.testing.assert_allclose(
+        sum(r["population_share"] for r in rep), 1.0, rtol=1e-9)
+    assert h.meta["fault_ledger"]["uplinks_lost"] >= 0
+    assert "chaos" in h.meta
+
+
+def test_run_federated_chaos_gan_drop_ledger():
+    """TriplePlay arm under heavy dropout: clients lost between GAN
+    launch and resolve land in the ledger and the run still completes
+    with both GAN engines agreeing on the drop set (engine-independent
+    schedule)."""
+    from repro.fl.simulator import FLConfig, run_federated
+    cfg = dict(
+        dataset="pacs", strategy="tripleplay", n_clients=3, rounds=1,
+        local_steps=2, n_per_class=14, batch_size=8, lr=3e-3,
+        gan_steps=20, participation="full",
+        chaos=sched_lib.ChaosConfig(dropout_prob=0.9))
+    hf = run_federated(FLConfig(**cfg, gan_engine="fleet"))
+    hs = run_federated(FLConfig(**cfg, gan_engine="sequential"))
+    assert hf.meta["fault_ledger"]["gan_dropped"] == \
+        hs.meta["fault_ledger"]["gan_dropped"]
+    assert hf.meta["fault_ledger"]["gan_dropped"] > 0
+    # fleet vs sequential GAN training differ at float32 reduction
+    # order (bucketed masked losses), so the trained pools — and hence
+    # client losses — agree only to ~1e-3 relative
+    for lc, ls in zip(hf.client_loss, hs.client_loss):
+        np.testing.assert_allclose(lc, ls, rtol=1e-3)
