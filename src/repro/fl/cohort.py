@@ -174,6 +174,25 @@ def round_indices(key, lens, steps: int, batch: int) -> np.ndarray:
         key, jnp.asarray(lens, jnp.int32), steps, batch))
 
 
+def client_logits(frozen, ccfg, trainable, x, class_emb, *,
+                  use_lora: bool):
+    """One client's forward from its *staged* input to zero-shot class
+    logits: ``x`` is the hoisted trainable-independent prefix output —
+    pooled backbone features for adapter-only arms, embedded patch
+    tokens for LoRA arms (see :func:`encode_rows`).
+
+    This is the single stacked-adapter apply path: the cohort training
+    loss vmaps it over the cohort axis, and the serving plane
+    (``fl.serve``) vmaps it over the request axis (its quantized-at-rest
+    store swaps in a ``quant_matmul`` head that tests pin against this
+    definition), so train-time and serve-time personalization share one
+    forward."""
+    feat = clip_lib.encode_tokens(frozen, ccfg, x,
+                                  lora=trainable.get("lora")) \
+        if use_lora else x
+    return client_lib.head_logits(frozen, trainable, feat, class_emb)
+
+
 def slice_client_delta(stacked_delta, i: int):
     """Extract client ``i``'s delta from a stacked (possibly quantized)
     delta tree. QTensor leaves are re-wrapped with per-client metadata so
@@ -410,11 +429,8 @@ class CohortEngine:
             bx, by = staged[ixt], labs[ixt]
 
             def loss_fn(tt):
-                feat = clip_lib.encode_tokens(
-                    frozen, ccfg, bx, lora=tt.get("lora")) \
-                    if use_lora else bx
-                logits = client_lib.head_logits(
-                    frozen, tt, feat, class_emb)
+                logits = client_logits(frozen, ccfg, tt, bx, class_emb,
+                                       use_lora=use_lora)
                 return (losses.cross_entropy(logits, by),
                         losses.accuracy(logits, by))
 

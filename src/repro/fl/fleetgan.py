@@ -75,6 +75,25 @@ from repro.fl import strategies as strategies_lib
 _DEFAULT_RUNTIME = runtime_lib.ProgramRuntime()
 
 
+@dataclass(frozen=True)
+class FleetGANConfig:
+    """Fleet-engine execution knobs.
+
+    ``bucket_batches`` — True (default) pads every client's GAN
+    minibatch to the cohort-wide bucket so all batch-size groups share
+    **one** train compile (plus the mean-correction arithmetic).
+    False opts out: each distinct batch-size group trains through the
+    *exact* :func:`gan.gan_scan` (in-program noise — bitwise the
+    sequential RNG stream, no mask arithmetic), paying one train
+    compile per group. The opt-out is for latency-critical single-shot
+    prep: when a population is trained once and its batch-size groups
+    are few, per-group programs are smaller and can compile+run faster
+    than the one bucketed program padded to the cohort max.
+    """
+    conv_impl: str = "gemm"
+    bucket_batches: bool = True
+
+
 def default_runtime() -> runtime_lib.ProgramRuntime:
     """The module-level runtime standalone calls compile through —
     benchmarks read its ledger (``stats()``/``subtotal("gan_")``) after
@@ -137,6 +156,17 @@ def _train_build(cfg):
         return gan_lib.gan_scan_bucketed(
             params, opt, cfg, imgs, labs, idx, z, z2, n_true,
             active=active)
+
+    return lambda *a: jax.vmap(one)(*a)
+
+
+def _train_exact_build(cfg):
+    """Per-group exact program (``FleetGANConfig.bucket_batches=False``):
+    plain :func:`gan.gan_scan` at the group's true batch size —
+    in-program noise, so the RNG stream is *bitwise* the sequential
+    ``train_gan`` one, with no mean-correction arithmetic."""
+    def one(params, opt, imgs, labs, idx, ks):
+        return gan_lib.gan_scan(params, opt, cfg, imgs, labs, idx, ks)
 
     return lambda *a: jax.vmap(one)(*a)
 
@@ -242,6 +272,7 @@ class FleetGANJob:
 
 def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
                      conv_impl: str = "gemm",
+                     fleet_cfg: Optional[FleetGANConfig] = None,
                      runtime: Optional[runtime_lib.ProgramRuntime] = None
                      ) -> FleetGANJob:
     """Dispatch the whole fleet's GAN training + synthesis as two fused
@@ -249,8 +280,13 @@ def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
     the caller can stage other device work (CLIP pool encoding) while
     the GANs train, then ``job.resolve()``. ``keys[i]`` is client i's
     GAN key (the simulator passes ``fold_in(rng, GAN_RNG_OFFSET + i)``).
+    ``fleet_cfg`` overrides the execution knobs (and its ``conv_impl``
+    wins over the legacy keyword when given).
     """
     t_launch = time.perf_counter()
+    if fleet_cfg is not None:
+        conv_impl = fleet_cfg.conv_impl
+    bucketed = fleet_cfg.bucket_batches if fleet_cfg is not None else True
     rt = runtime if runtime is not None else _DEFAULT_RUNTIME
     rep = FleetGANReport(n_clients=len(clients), n_eligible=0)
     job = FleetGANJob(report=rep, need={}, _clients=clients, _runtime=rt,
@@ -298,52 +334,88 @@ def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
     pool_i, pool_l, lens = stage_client_pools(
         [(c.images, c.labels) for c in clients])
 
-    # per-distinct-batch-size pre-draws at the TRUE shape (threefry is
-    # not shape-stable), each group padded on its minibatch axis to the
-    # bucket, then assembled into the (C, steps, B[, z_dim]) stacks with
-    # one concatenate + row permutation. Ineligible clients' steps are
-    # fully masked no-ops, so their draws stay zero.
     by_batch: Dict[int, List[int]] = {}
     for i in range(C):
         if eligible[i]:
             by_batch.setdefault(int(n_b[i]), []).append(i)
-    parts_idx, parts_z, parts_z2, order = [], [], [], []
-    for batch, pos in sorted(by_batch.items()):
-        pos_dev = jnp.asarray(pos)
-        iargs = (kbs[pos_dev], jnp.asarray(lens)[pos_dev])
-        idx_g = rt.compile("gan_idx", lambda: _indices_build(batch),
-                           iargs, static_key=(batch,))(*iargs)
-        zargs = (kss[pos_dev],)
-        z_g, z2_g = rt.compile(
-            "gan_z", lambda: _zstream_build(batch, cfg.z_dim), zargs,
-            static_key=(batch, cfg.z_dim))(*zargs)
-        bpad = ((0, 0), (0, 0), (0, B - batch))
-        parts_idx.append(jnp.pad(idx_g, bpad))
-        parts_z.append(jnp.pad(z_g, bpad + ((0, 0),)))
-        parts_z2.append(jnp.pad(z2_g, bpad + ((0, 0),)))
-        order.extend(pos)
-    inelig = [i for i in range(C) if not eligible[i]]
-    if inelig:
-        parts_idx.append(jnp.zeros((len(inelig), steps, B), jnp.int32))
-        parts_z.append(jnp.zeros((len(inelig), steps, B, cfg.z_dim)))
-        parts_z2.append(jnp.zeros((len(inelig), steps, B, cfg.z_dim)))
-        order.extend(inelig)
-    perm = jnp.asarray(np.argsort(np.asarray(order)))
-    idx_all = jnp.concatenate(parts_idx)[perm]
-    z_all = jnp.concatenate(parts_z)[perm]
-    z2_all = jnp.concatenate(parts_z2)[perm]
 
     params, opt = rt.compile("gan_init", lambda: _init_build(cfg),
                              (k0s,), static_key=(cfg,))(k0s)
-    active = jnp.asarray(np.repeat(
-        [[bool(e)] for e in eligible], steps, axis=1))
-    targs = (params, opt, jnp.asarray(pool_i), jnp.asarray(pool_l),
-             idx_all, z_all, z2_all, jnp.asarray(n_b), active)
-    params, opt, ms = rt.compile(
-        "gan_train", lambda: _train_build(cfg), targs,
-        static_key=(cfg,), donate_argnums=(0, 1))(*targs)
-    job._params, job._ms = params, ms
-    rep.groups.append((B, C))
+
+    if bucketed:
+        # per-distinct-batch-size pre-draws at the TRUE shape (threefry
+        # is not shape-stable), each group padded on its minibatch axis
+        # to the bucket, then assembled into the (C, steps, B[, z_dim])
+        # stacks with one concatenate + row permutation. Ineligible
+        # clients' steps are fully masked no-ops, so their draws stay
+        # zero.
+        parts_idx, parts_z, parts_z2, order = [], [], [], []
+        for batch, pos in sorted(by_batch.items()):
+            pos_dev = jnp.asarray(pos)
+            iargs = (kbs[pos_dev], jnp.asarray(lens)[pos_dev])
+            idx_g = rt.compile("gan_idx", lambda: _indices_build(batch),
+                               iargs, static_key=(batch,))(*iargs)
+            zargs = (kss[pos_dev],)
+            z_g, z2_g = rt.compile(
+                "gan_z", lambda: _zstream_build(batch, cfg.z_dim),
+                zargs, static_key=(batch, cfg.z_dim))(*zargs)
+            bpad = ((0, 0), (0, 0), (0, B - batch))
+            parts_idx.append(jnp.pad(idx_g, bpad))
+            parts_z.append(jnp.pad(z_g, bpad + ((0, 0),)))
+            parts_z2.append(jnp.pad(z2_g, bpad + ((0, 0),)))
+            order.extend(pos)
+        inelig = [i for i in range(C) if not eligible[i]]
+        if inelig:
+            parts_idx.append(
+                jnp.zeros((len(inelig), steps, B), jnp.int32))
+            parts_z.append(
+                jnp.zeros((len(inelig), steps, B, cfg.z_dim)))
+            parts_z2.append(
+                jnp.zeros((len(inelig), steps, B, cfg.z_dim)))
+            order.extend(inelig)
+        perm = jnp.asarray(np.argsort(np.asarray(order)))
+        idx_all = jnp.concatenate(parts_idx)[perm]
+        z_all = jnp.concatenate(parts_z)[perm]
+        z2_all = jnp.concatenate(parts_z2)[perm]
+
+        active = jnp.asarray(np.repeat(
+            [[bool(e)] for e in eligible], steps, axis=1))
+        targs = (params, opt, jnp.asarray(pool_i), jnp.asarray(pool_l),
+                 idx_all, z_all, z2_all, jnp.asarray(n_b), active)
+        params, opt, ms = rt.compile(
+            "gan_train", lambda: _train_build(cfg), targs,
+            static_key=(cfg,), donate_argnums=(0, 1))(*targs)
+        job._params, job._ms = params, ms
+        rep.groups.append((B, C))
+    else:
+        # FleetGANConfig.bucket_batches=False: each batch-size group
+        # trains through the exact per-group gan_scan (one compile per
+        # group). Ineligible clients are simply left out — they keep
+        # their init params (never written back) instead of riding the
+        # program masked.
+        pool_i_d, pool_l_d = jnp.asarray(pool_i), jnp.asarray(pool_l)
+        d_l = np.zeros((C, steps), np.float32)
+        g_l = np.zeros((C, steps), np.float32)
+        for batch, pos in sorted(by_batch.items()):
+            pos_dev = jnp.asarray(pos)
+            iargs = (kbs[pos_dev], jnp.asarray(lens)[pos_dev])
+            idx_g = rt.compile("gan_idx", lambda: _indices_build(batch),
+                               iargs, static_key=(batch,))(*iargs)
+            gp = jax.tree.map(lambda l: l[pos_dev], params)
+            go = jax.tree.map(lambda l: l[pos_dev], opt)
+            targs = (gp, go, pool_i_d[pos_dev], pool_l_d[pos_dev],
+                     idx_g, kss[pos_dev])
+            gp, go, ms = rt.compile(
+                "gan_train", lambda: _train_exact_build(cfg), targs,
+                static_key=(cfg, "exact"),
+                donate_argnums=(0, 1))(*targs)
+            params = jax.tree.map(
+                lambda l, g: l.at[pos_dev].set(g), params, gp)
+            d_l[pos] = np.asarray(ms["d_loss"])
+            g_l[pos] = np.asarray(ms["g_loss"])
+            rep.groups.append((batch, len(pos)))
+        job._params = params
+        job._ms = {"d_loss": d_l, "g_loss": g_l}
 
     # synthesis: per-client z drawn eagerly at the exact sequential
     # shape (threefry draws are not prefix-stable under padding), then
@@ -378,6 +450,7 @@ def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
 
 def prepare_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
                       conv_impl: str = "gemm",
+                      fleet_cfg: Optional[FleetGANConfig] = None,
                       runtime: Optional[runtime_lib.ProgramRuntime] =
                       None) -> FleetGANReport:
     """Train + synthesize every eligible client's GAN as stacked fused
@@ -390,8 +463,9 @@ def prepare_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
 
     Blocking composition of :func:`launch_gan_fleet` + ``resolve()``.
     Ineligible clients ride the one bucketed program fully masked
-    (bitwise no-op steps) and keep their GAN fields unset. Returns a
-    :class:`FleetGANReport`."""
+    (bitwise no-op steps) and keep their GAN fields unset — or, under
+    ``FleetGANConfig(bucket_batches=False)``, are simply left out of
+    the per-group exact programs. Returns a :class:`FleetGANReport`."""
     return launch_gan_fleet(clients, keys, steps=steps,
-                            conv_impl=conv_impl,
+                            conv_impl=conv_impl, fleet_cfg=fleet_cfg,
                             runtime=runtime).resolve()

@@ -194,6 +194,16 @@ class ProgramRuntime:
         """Compile-or-hit, then execute synchronously-dispatched."""
         return self.compile(kind, build, args, **kw)(*args)
 
+    def count(self, kind: str, counter: str, n: int = 1) -> None:
+        """Charge ``n`` to an auxiliary per-kind counter in the same
+        ledger the compile accounting lives in — the serving plane's
+        adapter cache reports hits/misses/evictions this way, so
+        ``stats()`` (and therefore ``History.meta``) stays the one place
+        every runtime-level count is read from."""
+        k = self._kinds.setdefault(
+            kind, {"n_compiles": 0, "compile_time_s": 0.0})
+        k[counter] = int(k.get(counter, 0)) + int(n)
+
     def dispatch(self, kind: str, build, args, **kw) -> Handle:
         """Compile-or-hit, then execute without forcing a host sync."""
         return Handle(self.compile(kind, build, args, **kw)(*args))

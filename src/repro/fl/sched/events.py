@@ -41,3 +41,11 @@ class EventQueue:
         t, _, cid, tag = heapq.heappop(self._heap)
         self.now = max(self.now, t)
         return t, cid, tag
+
+    def peek(self) -> Tuple[float, int, int]:
+        """The earliest pending (time, cid, tag) without popping it or
+        advancing the clock — batching consumers (the serve-plane
+        request driver) use it to drain everything that arrived before a
+        dispatch point while leaving later events queued."""
+        t, _, cid, tag = self._heap[0]
+        return t, cid, tag

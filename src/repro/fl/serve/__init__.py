@@ -1,0 +1,27 @@
+"""Personalized-adapter serving plane (``fl.serve``).
+
+The inference-side inversion of the training stack: trained per-user
+adapter/LoRA trees live quantized-at-rest in stacked device slabs
+(:mod:`.store`), ragged request flights batch by shape bucket and vmap
+over the adapter axis through one fused program per tenant family
+(:mod:`.engine`), and reproducible latency comes from replaying
+Zipf/diurnal request traces on the scheduler's virtual clock
+(:mod:`.driver`). :mod:`.demo` wires a small end-to-end plane from the
+training machinery.
+"""
+from repro.fl.serve.demo import demo_plane, request_images
+from repro.fl.serve.driver import (RequestTrace, load_request_trace,
+                                   replay, save_request_trace,
+                                   zipf_request_trace)
+from repro.fl.serve.engine import (ServeConfig, ServeEngine,
+                                   quant_head_logits, serve_sequential)
+from repro.fl.serve.store import (AdapterStore, personalized_trainables,
+                                  quantize_at_rest, take_rows)
+
+__all__ = [
+    "AdapterStore", "RequestTrace", "ServeConfig", "ServeEngine",
+    "demo_plane", "load_request_trace", "personalized_trainables",
+    "quant_head_logits", "quantize_at_rest", "replay",
+    "request_images", "save_request_trace", "serve_sequential",
+    "take_rows", "zipf_request_trace",
+]

@@ -1,0 +1,111 @@
+"""Build a small end-to-end serving plane from the training stack.
+
+One function the example, benchmark, CLI ``--adapters`` mode, and tests
+all share: partition a synthetic dataset over ``n_users``, train one
+cohort wave per tenant family (adapter-only, and LoRA when ``mixed``),
+hand the personalized trees to an :class:`AdapterStore`, and wrap a
+:class:`ServeEngine` over it. Deterministic in ``seed``; everything
+compiles through one shared :class:`ProgramRuntime` so the returned
+plane's ledger covers training handoff and serving alike.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clip as clip_lib
+from repro.data.synthetic import class_tokens, make_dataset
+from repro.fl import client as client_lib
+from repro.fl import cohort as cohort_lib
+from repro.fl import runtime as runtime_lib
+from repro.fl.serve import engine as engine_lib
+from repro.fl.serve import store as store_lib
+from repro.fl.strategies import STRATEGIES
+
+
+def _train_family(frozen, ccfg, class_emb, data, *, arm: str, uids,
+                  seed: int, local_steps: int, batch_size: int,
+                  lr: float, runtime) -> Dict[int, Any]:
+    """Round-robin shards of the dataset over one tenant family's users,
+    run one personalization wave, return uid -> fp32 trainable."""
+    strat = STRATEGIES[arm]
+    n = len(uids)
+    labels = data["labels"]
+    clients = []
+    for j, uid in enumerate(uids):
+        sl = np.arange(j, len(labels), n)[:24]
+        clients.append(client_lib.Client(
+            cid=j, images=data["images"][sl], labels=labels[sl],
+            n_classes=data["spec"].n_classes, strategy=strat))
+    engine = cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(
+            strategy=strat, local_steps=local_steps,
+            batch_size=batch_size, lr=lr, donate=False),
+        runtime=runtime)
+    global_tr = client_lib.init_trainable(
+        jax.random.PRNGKey(seed + 1), ccfg, strat)
+    return store_lib.personalized_trainables(
+        engine, global_tr, jax.random.PRNGKey(seed + 2),
+        uid_offset=min(uids))
+
+
+def demo_plane(n_users: int = 8, *, mixed: bool = False, seed: int = 0,
+               quant_bits: int = 8, max_entries: Optional[int] = None,
+               max_batch: int = 16, local_steps: int = 2,
+               batch_size: int = 8, lr: float = 3e-3,
+               n_per_class: int = 20,
+               runtime: Optional[runtime_lib.ProgramRuntime] = None
+               ) -> Dict[str, Any]:
+    """A ready-to-serve plane over ``n_users`` personalized tenants.
+    ``mixed`` splits the population into an adapter-only (fedclip) half
+    and a LoRA (qlora_nogan) half — two slab families in one store.
+    ``max_entries`` defaults to the full population (no evictions);
+    shrink it to exercise LRU behavior."""
+    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime()
+    ccfg = clip_lib.CLIPConfig()
+    frozen = clip_lib.init_clip(jax.random.PRNGKey(seed), ccfg)
+    data = make_dataset("pacs", n_per_class=n_per_class, seed=seed,
+                        longtail_gamma=4.0)
+    spec = data["spec"]
+    class_emb = clip_lib.text_embedding(
+        frozen, ccfg,
+        jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+
+    kw = dict(seed=seed, local_steps=local_steps,
+              batch_size=batch_size, lr=lr, runtime=rt)
+    if mixed:
+        n_a = max(1, n_users // 2)
+        backing = _train_family(frozen, ccfg, class_emb, data,
+                                arm="fedclip", uids=range(n_a), **kw)
+        backing.update(_train_family(
+            frozen, ccfg, class_emb, data, arm="qlora_nogan",
+            uids=range(n_a, n_users), **kw))
+    else:
+        backing = _train_family(frozen, ccfg, class_emb, data,
+                                arm="fedclip", uids=range(n_users),
+                                **kw)
+
+    cap = n_users if max_entries is None else int(max_entries)
+    store = store_lib.AdapterStore(backing, max_entries=cap,
+                                   quant_bits=quant_bits, runtime=rt)
+    engine = engine_lib.ServeEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, store=store,
+        cfg=engine_lib.ServeConfig(max_batch=min(max_batch, cap)))
+    return {"engine": engine, "store": store, "backing": backing,
+            "frozen": frozen, "ccfg": ccfg, "class_emb": class_emb,
+            "runtime": rt, "n_users": n_users,
+            "n_classes": spec.n_classes,
+            # request inputs: draw per-request images from the dataset
+            "images": data["images"]}
+
+
+def request_images(plane: Dict[str, Any], trace, *, seed: int = 0):
+    """Deterministic per-request input images for a trace: request i
+    gets a seeded draw from the demo dataset."""
+    rs = np.random.RandomState(seed)
+    pool = plane["images"]
+    return pool[rs.randint(0, len(pool), trace.n)]

@@ -1,0 +1,201 @@
+"""Deterministic request-trace driver for the serving plane.
+
+Latency numbers from a live request stream are not reproducible; a
+*virtual-time* replay is. A :class:`RequestTrace` is a Zipf-popularity
+user stream with exponential interarrivals whose rate is diurnally
+modulated through the **same sinusoid machinery the scheduler traces
+use** (``sched.traces.AvailabilityTrace.availability_at`` — the trace
+generator literally instantiates a one-row availability trace as its
+rate modulator), so request load peaks and troughs like client
+availability does in ``diurnal_trace``.
+
+:func:`replay` then drives a :class:`~repro.fl.serve.engine.ServeEngine`
+through the trace on the scheduler's virtual clock
+(``sched.events.EventQueue``): the server admits the earliest pending
+request, drains every arrival at or before that dispatch point into the
+flight (up to ``max_batch``), and advances a deterministic service-cost
+model ``service_v = c0 + c1 * bucket`` — so flight composition, queue
+depths, and per-request virtual latency are a pure function of
+(trace, engine config, cost model). Real wall-clock per dispatch is
+recorded *alongside* the virtual clock (it never influences batching),
+which is what the benchmark's throughput numbers read.
+
+Traces round-trip through JSON (``save_request_trace`` /
+``load_request_trace``) like scheduler traces do, so a latency scenario
+replays from a file instead of a seed.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.fl.sched.events import EventQueue
+from repro.fl.sched.traces import AvailabilityTrace
+from repro.fl import runtime as runtime_lib
+
+# default virtual service-cost model: a dispatch costs c0 + c1 * bucket
+# virtual seconds. Only the *shape* matters for reproducible batching
+# (fixed overhead + per-row cost); the constants are arbitrary units.
+SERVICE_C0 = 2e-3
+SERVICE_C1 = 5e-4
+
+
+@dataclass(frozen=True)
+class RequestTrace:
+    """A replayable request stream: ``uid[i]`` arrives at virtual time
+    ``t[i]`` (nondecreasing). ``n_users`` is the population size the
+    uids index into."""
+    uid: np.ndarray
+    t: np.ndarray
+    n_users: int
+    name: str = "custom"
+
+    def __post_init__(self):
+        uid = np.asarray(self.uid, np.int64)
+        t = np.asarray(self.t, np.float64)
+        if uid.shape != t.shape or uid.ndim != 1:
+            raise ValueError("uid and t must be equal-length vectors")
+        if len(t) and np.any(np.diff(t) < 0):
+            raise ValueError("arrival times must be nondecreasing")
+        if len(uid) and (uid.min() < 0 or uid.max() >= self.n_users):
+            raise ValueError(
+                f"uids outside [0, {self.n_users})")
+        object.__setattr__(self, "uid", uid)
+        object.__setattr__(self, "t", t)
+
+    @property
+    def n(self) -> int:
+        return len(self.uid)
+
+    def concurrency(self) -> int:
+        """Distinct users in the trace — the 'concurrent tenants' count
+        the multi-tenancy claims are stated over."""
+        return len(np.unique(self.uid))
+
+
+def zipf_request_trace(n_users: int, n_requests: int, *, seed: int = 0,
+                       zipf: float = 1.1, rate: float = 32.0,
+                       period: float = 0.0, amplitude: float = 0.0,
+                       phase: float = 0.25) -> RequestTrace:
+    """Zipf-popularity request stream: user popularity follows a
+    shuffled Zipf law (a few hot users dominate — what gives an LRU
+    adapter cache its hit rate), interarrivals are exponential with
+    base ``rate`` requests per virtual second, diurnally modulated when
+    ``period > 0`` (amplitude in [0, 1)) through a one-row
+    ``AvailabilityTrace`` — the scheduler's own cycle model.
+    Deterministic in (n_users, n_requests, seed)."""
+    if n_users < 1 or n_requests < 1:
+        raise ValueError("need at least one user and one request")
+    rs = np.random.RandomState(seed)
+    pop = 1.0 / np.arange(1, n_users + 1, dtype=np.float64) ** zipf
+    rs.shuffle(pop)
+    pop /= pop.sum()
+    uids = rs.choice(n_users, size=n_requests, p=pop)
+    mod = AvailabilityTrace(
+        availability=np.ones(1), speed=np.ones(1),
+        step_mult=np.ones(1, np.int32), phase=np.asarray([phase]),
+        period=float(period), amplitude=float(amplitude),
+        name="request-rate")
+    t, now = np.zeros(n_requests), 0.0
+    for i in range(n_requests):
+        r = rate * float(mod.availability_at(now)[0])
+        now += rs.exponential(1.0 / r)
+        t[i] = now
+    name = f"zipf(seed={seed})" if period <= 0 else \
+        f"zipf-diurnal(seed={seed})"
+    return RequestTrace(uid=uids, t=t, n_users=n_users, name=name)
+
+
+def save_request_trace(trace: RequestTrace, path) -> None:
+    with open(path, "w") as f:
+        json.dump({"name": trace.name, "n_users": int(trace.n_users),
+                   "uid": [int(u) for u in trace.uid],
+                   "t": [float(v) for v in trace.t]}, f, indent=1)
+
+
+def load_request_trace(path) -> RequestTrace:
+    with open(path) as f:
+        d = json.load(f)
+    return RequestTrace(uid=np.asarray(d["uid"], np.int64),
+                        t=np.asarray(d["t"], np.float64),
+                        n_users=int(d["n_users"]),
+                        name=str(d.get("name", "custom")))
+
+
+def replay(engine, trace: RequestTrace, images, *,
+           service: Tuple[float, float] = (SERVICE_C0, SERVICE_C1),
+           collect_logits: bool = True) -> Dict[str, Any]:
+    """Replay ``trace`` through ``engine`` on the virtual clock.
+    ``images[i]`` is request i's input (aligned with the trace rows).
+
+    Returns the replay record: per-request virtual latency (+ p50/p99),
+    the deterministic flight schedule, measured wall time per dispatch,
+    virtual-time throughput, and the store's hit/miss/eviction delta
+    over the replay."""
+    if len(images) != trace.n:
+        raise ValueError(
+            f"images ({len(images)}) must align with the trace rows "
+            f"({trace.n})")
+    c0, c1 = service
+    q = EventQueue()
+    for i, at in enumerate(trace.t):
+        q.push(float(at), i)
+    s0 = engine.store.stats()
+    lat_v = np.zeros(trace.n)
+    logits = [None] * trace.n if collect_logits else None
+    flights = []
+    free_v = 0.0
+    wall_total = 0.0
+    while len(q):
+        at, rid, _ = q.pop()
+        start = max(free_v, at)
+        batch = [rid]
+        # drain everything that arrived by the dispatch point — this is
+        # where queueing delay buys batching
+        while len(q) and len(batch) < engine.cfg.max_batch:
+            t_next, _, _ = q.peek()
+            if t_next > start:
+                break
+            _, r, _ = q.pop()
+            batch.append(r)
+        B = runtime_lib.bucket_width(len(batch), engine.cfg.max_batch)
+        done = start + c0 + c1 * B
+        w0 = time.perf_counter()
+        out, info = engine.serve(
+            [(int(trace.uid[r]), images[r]) for r in batch])
+        wall = time.perf_counter() - w0
+        wall_total += wall
+        for j, r in enumerate(batch):
+            lat_v[r] = done - trace.t[r]
+            if collect_logits:
+                logits[r] = out[j]
+        flights.append({"start_v": start, "n": len(batch), "bucket": B,
+                        "groups": info["groups"], "wall_s": wall})
+        free_v = done
+    s1 = engine.store.stats()
+    makespan_v = free_v - float(trace.t[0]) if trace.n else 0.0
+    rec = {
+        "trace": trace.name,
+        "n_requests": trace.n,
+        "concurrency": trace.concurrency(),
+        "n_flights": len(flights),
+        "flights": flights,
+        "lat_v": lat_v,
+        "lat_v_p50": float(np.percentile(lat_v, 50)),
+        "lat_v_p99": float(np.percentile(lat_v, 99)),
+        "throughput_v": trace.n / max(makespan_v, 1e-12),
+        "wall_s": wall_total,
+        "throughput_wall": trace.n / max(wall_total, 1e-12),
+        "store": {k: s1[k] - s0[k]
+                  for k in ("hits", "misses", "evictions")},
+    }
+    rec["store"]["hit_rate"] = (
+        rec["store"]["hits"] /
+        max(rec["store"]["hits"] + rec["store"]["misses"], 1))
+    if collect_logits:
+        rec["logits"] = np.stack(logits)
+    return rec

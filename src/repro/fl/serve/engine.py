@@ -1,0 +1,216 @@
+"""ServeEngine: multi-tenant batched inference over personalized adapters.
+
+The cohort bucketing problem, re-aimed at requests. A flight of R ragged
+requests (each a ``(uid, image)``) is answered by **one fused program
+per tenant family**:
+
+ 1. every uid is fetched through the :class:`~repro.fl.serve.store
+    .AdapterStore` (LRU admit/evict, quantized-at-rest slabs);
+ 2. rows group by slab family (adapter-only vs LoRA tenants run
+    different towers);
+ 3. the request axis pads to ``bucket_width(R, max_batch)`` — the same
+    power-of-two/floor-4 bucketing the cohort engine uses for client
+    selections, so a request-size sweep reuses O(log max_batch) serve
+    compiles and a full batch never pads;
+ 4. the **hoisted frozen CLIP prefix** runs once over the padded rows
+    (``cohort.encode_rows`` — pooled features for adapter-only, patch
+    tokens for LoRA: the identical staging programs training uses, so
+    serve and train share ``stage_encode`` compiles);
+ 5. one dispatch gathers the slot rows out of the slab
+    (``store.take_rows``) and ``jax.vmap``s the per-user head over the
+    *adapter* axis — many distinct users, one program.
+
+The per-user head is ``quant_head_logits``: ``head_logits`` with every
+quantized-at-rest matrix contracted through ``ops.quant_matmul``
+(in-kernel dequant). At S=1 — a single pooled CLIP feature — the
+adapter's flash-attention softmax is over one position and identically
+1, so Att(D) reduces *exactly* to the value path ``x @ wv``; the serve
+head exploits that closed form (pinned against ``adapter.apply`` /
+``cohort.client_logits`` by the parity tests).
+
+Parity oracle: :func:`serve_sequential` answers one request at a time —
+``encode -> adapter -> logits`` via ``client.forward_logits`` on the
+fp32 backing trees, one jitted per-request dispatch (the honest
+sequential baseline the benchmark compares against). The batched plane
+must match it to tolerance (exact when the store is unquantized).
+
+Ledger: every dispatch charges ``serve_batch`` counters
+(``n_flights``/``n_groups``/``n_requests``) via
+``ProgramRuntime.count`` next to its compile counts — CI reads them to
+fail if batching silently degenerates to per-user dispatch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clip as clip_lib
+from repro.core import quant as qlib
+from repro.fl import client as client_lib
+from repro.fl import cohort as cohort_lib
+from repro.fl import runtime as runtime_lib
+from repro.fl.serve import store as store_lib
+from repro.kernels import ops as kops
+
+SERVE_KIND = "serve_batch"
+
+
+def _mm(x, w):
+    """Contraction against a possibly quantized-at-rest weight: QTensor
+    leaves dequantize in-kernel through ``quant_matmul``; fp leaves are
+    a plain matmul."""
+    if isinstance(w, qlib.QTensor):
+        return kops.quant_matmul(x, w)
+    return x @ w
+
+
+def quant_head_logits(frozen, trainable, feat, class_emb):
+    """``client.head_logits`` for one pooled feature row against a
+    (possibly quantized) adapter tree. Uses the exact S=1 reduction of
+    the adapter's attention — softmax over a single position is 1, so
+    Att(D) == V — which removes the wq/wk contractions entirely and
+    leaves four quantizable matmuls for ``quant_matmul``."""
+    a = trainable["adapter"]
+    x = feat[None, :]
+    v = _mm(x, a["wv"])
+    x = x + _mm(v, a["wo"])
+    h = jax.nn.relu(_mm(x, a["w1"]) + a["b1"])
+    x = x + _mm(h, a["w2"]) + a["b2"]
+    emb = x @ frozen["proj_v"]
+    return clip_lib.zero_shot_logits(emb, class_emb,
+                                     frozen["logit_scale"])[0]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Static serve-plane parameters (baked into the fused programs)."""
+    max_batch: int = 64       # requests per dispatch (= bucket ceiling)
+
+
+class ServeEngine:
+    """Batched request executor over an :class:`AdapterStore`."""
+
+    def __init__(self, *, frozen, ccfg, class_emb,
+                 store: store_lib.AdapterStore,
+                 cfg: ServeConfig = ServeConfig()):
+        if cfg.max_batch < 1:
+            raise ValueError(f"max_batch={cfg.max_batch} must be >= 1")
+        if cfg.max_batch > store.max_entries:
+            # one flight touches up to max_batch distinct users; a
+            # flight wider than the store would evict its own residents
+            # mid-fetch
+            raise ValueError(
+                f"max_batch={cfg.max_batch} exceeds the store's "
+                f"max_entries={store.max_entries} — a single flight "
+                "must fit in the resident set")
+        self.frozen = frozen
+        self.ccfg = ccfg
+        self.class_emb = class_emb
+        self.store = store
+        self.cfg = cfg
+        self.runtime = store.runtime
+        self.n_requests = 0   # requests answered by the batched plane
+        self.n_dispatches = 0  # fused serve programs dispatched
+
+    # -- the fused serve program --------------------------------------
+    def _build_serve(self, use_lora: bool):
+        ccfg = self.ccfg
+
+        def fn(slabs, slots, staged, frozen, class_emb):
+            tr = store_lib.take_rows(slabs, slots)
+
+            def one(t, x):
+                if use_lora:
+                    feat = clip_lib.encode_tokens(
+                        frozen, ccfg, x[None], lora=t.get("lora"))[0]
+                else:
+                    feat = x
+                return quant_head_logits(frozen, t, feat, class_emb)
+
+            return jax.vmap(one)(tr, staged)
+
+        return lambda: fn
+
+    def _serve_group(self, famk, rows: List[Tuple[int, Any]]):
+        """One family's share of a flight: rows is [(slot, image)] in
+        request order, len <= max_batch."""
+        fam = self.store.family(famk)
+        use_lora = fam["use_lora"]
+        G = len(rows)
+        B = runtime_lib.bucket_width(G, self.cfg.max_batch)
+        imgs = np.stack([im for _, im in rows]).astype(np.float32)
+        # pad the request axis BEFORE the prefix encode so both the
+        # staging program and the serve program see only bucket shapes
+        imgs = runtime_lib.pad_leading(jnp.asarray(imgs), B)
+        # pad slots with row 0's (a valid resident row — the pad output
+        # is sliced off, it just must not gather out of bounds)
+        slots = np.full(B, rows[0][0], np.int32)
+        slots[:G] = [s for s, _ in rows]
+        staged = cohort_lib.encode_rows(
+            self.frozen, self.ccfg, use_lora=use_lora, rows=imgs,
+            runtime=self.runtime)
+        args = (fam["slabs"], jnp.asarray(slots), staged, self.frozen,
+                self.class_emb)
+        out = self.runtime.compile(
+            SERVE_KIND, self._build_serve(use_lora), args,
+            static_key=(self.ccfg, use_lora, self.store.quant_bits,
+                        famk[0]))(*args)
+        self.n_dispatches += 1
+        self.runtime.count(SERVE_KIND, "n_groups")
+        return np.asarray(out)[:G], B
+
+    def serve(self, requests: Sequence[Tuple[int, Any]]):
+        """Answer ``[(uid, image), ...]`` -> (logits ``(R, n_classes)``
+        in request order, flight info). Flights wider than ``max_batch``
+        split in arrival order."""
+        if not len(requests):
+            raise ValueError("empty request flight")
+        logits: List[Any] = [None] * len(requests)
+        info: Dict[str, Any] = {"n_requests": len(requests),
+                                "flights": 0, "groups": 0,
+                                "buckets": []}
+        for lo in range(0, len(requests), self.cfg.max_batch):
+            flight = requests[lo:lo + self.cfg.max_batch]
+            # fetch in request order: LRU guarantees a flight's own
+            # residents are never evicted by its later admissions
+            placed = [self.store.fetch(uid) for uid, _ in flight]
+            groups: "Dict[Tuple, List[int]]" = {}
+            for j, (famk, _) in enumerate(placed):
+                groups.setdefault(famk, []).append(j)
+            for famk, rows_j in groups.items():
+                out, B = self._serve_group(
+                    famk, [(placed[j][1], flight[j][1])
+                           for j in rows_j])
+                for o, j in zip(out, rows_j):
+                    logits[lo + j] = o
+                info["groups"] += 1
+                info["buckets"].append(B)
+            info["flights"] += 1
+            self.runtime.count(SERVE_KIND, "n_flights")
+            self.runtime.count(SERVE_KIND, "n_requests", len(flight))
+            self.n_requests += len(flight)
+        return np.stack(logits), info
+
+
+# -- sequential oracle -------------------------------------------------
+
+_oracle_step = jax.jit(client_lib.forward_logits, static_argnums=(2,))
+
+
+def serve_sequential(frozen, ccfg, class_emb, backing, requests):
+    """Per-user reference plane: one request at a time, full
+    ``encode -> adapter -> logits`` forward on the fp32 backing tree,
+    one jitted dispatch per request. The batched engine must match this
+    to tolerance (exactly, when the store is unquantized) — and beat it
+    on throughput."""
+    out = []
+    for uid, img in requests:
+        tr = backing[int(uid)]
+        out.append(np.asarray(_oracle_step(
+            frozen, tr, ccfg, jnp.asarray(img, jnp.float32)[None],
+            class_emb)[0]))
+    return np.stack(out)

@@ -1,0 +1,274 @@
+"""AdapterStore: device-resident cache of per-user personalized params.
+
+Training (``fl.cohort``) produces one tiny trainable tree per user —
+an attention-adapter head, plus vision-LoRA factors on the QLoRA arms —
+against the shared frozen CLIP. Serving inverts the layout: instead of
+broadcasting one global tree over a cohort axis, the store keeps the
+*resident* users' trees stacked along a leading **slot axis** so a
+batched serve program personalizes per request with one in-program
+``jnp.take(slab, slots)`` gather — no per-user host->device transfer on
+the request path.
+
+Quantized at rest: eligible 2-D adapter matrices are stored blockwise
+int8/int4 via ``kernels.ops.blockwise_quant`` (the Pallas kernel on TPU,
+its jnp oracle on CPU) and are **never dequantized into a dense slab**
+on the host — the serve program contracts activations against the
+quantized slab rows through ``ops.quant_matmul``, so dequantization
+happens in-kernel, per tile, at request time. Biases and other 1-D
+leaves stay fp (the QLoRA convention), and LoRA factors stay fp at rest:
+a rank-4 pair is ~KB-scale, below any eligibility floor, and the LoRA
+tower consumes it densely inside ``encode_tokens``.
+
+Mixed tenancy: adapter-only and LoRA users carry different tree
+structures, so the store groups slabs by **family** (treedef + leaf
+geometry). Slots are per-family; the LRU order and the ``max_entries``
+capacity are global across families — admitting any user past capacity
+evicts the globally least-recently-used resident, whatever its family.
+Evicted users re-quantize deterministically from the host backing on
+their next fetch, so eviction is a latency event, never a correctness
+one.
+
+Accounting: hits/misses/evictions are charged to the shared
+:class:`repro.fl.runtime.ProgramRuntime` ledger (kind ``serve_store``
+via ``ProgramRuntime.count``) next to the compile counts, so one
+``stats()`` read covers the whole serving plane.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant as qlib
+from repro.fl import cohort as cohort_lib
+from repro.fl import runtime as runtime_lib
+from repro.kernels import ops as kops
+
+# At-rest quantization layout: the uplink-compression constants'
+# serve-side mirror (block along the contraction dim, small-leaf floor),
+# plus "lora" in the skip set — see the module docstring.
+SERVE_BLOCK = 64
+SERVE_MIN_SIZE = 256
+SERVE_SKIP = ("slot", "lora")
+
+STORE_KIND = "serve_store"
+
+
+def quantize_at_rest(tree, *, bits: int):
+    """Quantize a per-user trainable tree for storage: every eligible
+    >=2-D leaf goes blockwise int8/int4 (``bits`` 0 keeps the tree fp —
+    the store's unquantized mode, used by exact-parity tests). 2-D
+    leaves run through ``kernels.ops.blockwise_quant`` so TPU processes
+    take the Pallas path; rare higher-rank eligible leaves fall back to
+    the jnp quantizer with identical layout."""
+    if bits == 0:
+        return tree
+    if bits not in (4, 8):
+        raise ValueError(f"at-rest bits must be 0, 4 or 8, got {bits}")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(k) for k in path)
+        if not qlib._quantizable(pstr, leaf.shape, leaf.dtype,
+                                 SERVE_MIN_SIZE, SERVE_SKIP):
+            out.append(leaf)
+            continue
+        b = qlib._pick_block(leaf.shape[-2], SERVE_BLOCK)
+        eff_bits = 8 if b % 2 else bits      # odd blocks can't pack
+        if leaf.ndim == 2:
+            out.append(kops.blockwise_quant(leaf, bits=eff_bits, block=b,
+                                            mode="linear"))
+        else:
+            out.append(qlib.quantize(leaf, bits=eff_bits, block=b,
+                                     mode="linear"))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _is_q(l) -> bool:
+    return isinstance(l, qlib.QTensor)
+
+
+def take_rows(slabs, slots):
+    """Gather slot rows out of a slab tree (leading slot axis on every
+    data array). QTensor leaves gather their ``q``/``scales`` payloads
+    and keep the per-user metadata, so the gathered tree is exactly a
+    stacked per-user tree — the serve program's vmap axis."""
+    def f(l):
+        if _is_q(l):
+            return qlib.QTensor(
+                q=jnp.take(l.q, slots, axis=0),
+                scales=jnp.take(l.scales, slots, axis=0),
+                bits=l.bits, mode=l.mode, block=l.block,
+                out_dtype=l.out_dtype, orig_shape=l.orig_shape)
+        return jnp.take(l, slots, axis=0)
+    return jax.tree.map(f, slabs, is_leaf=_is_q)
+
+
+def _slab_like(qtree, capacity: int):
+    """Zero slab tree with ``capacity`` slots per leaf of a quantized
+    per-user tree; QTensor leaves keep per-user metadata (``orig_shape``
+    is the *per-user* weight shape, as ``slice_client_delta`` does for
+    stacked deltas)."""
+    def f(l):
+        if _is_q(l):
+            return qlib.QTensor(
+                q=jnp.zeros((capacity,) + tuple(l.q.shape), l.q.dtype),
+                scales=jnp.zeros((capacity,) + tuple(l.scales.shape),
+                                 l.scales.dtype),
+                bits=l.bits, mode=l.mode, block=l.block,
+                out_dtype=l.out_dtype, orig_shape=l.orig_shape)
+        return jnp.zeros((capacity,) + tuple(l.shape), l.dtype)
+    return jax.tree.map(f, qtree, is_leaf=_is_q)
+
+
+def _slab_set(slabs, slot: int, qtree):
+    def f(s, l):
+        if _is_q(s):
+            return qlib.QTensor(
+                q=s.q.at[slot].set(l.q),
+                scales=s.scales.at[slot].set(l.scales),
+                bits=s.bits, mode=s.mode, block=s.block,
+                out_dtype=s.out_dtype, orig_shape=s.orig_shape)
+        return s.at[slot].set(l)
+    return jax.tree.map(f, slabs, qtree, is_leaf=_is_q)
+
+
+def _family_key(qtree) -> Tuple:
+    """Hashable slab-family identity: tree structure (which carries
+    QTensor meta — bits/mode/block/orig_shape) + data-leaf geometry."""
+    treedef = jax.tree_util.tree_structure(qtree)
+    sig = tuple((tuple(l.shape), str(l.dtype))
+                for l in jax.tree.leaves(qtree))
+    return (treedef, sig)
+
+
+class AdapterStore:
+    """LRU cache of quantized per-user trainables in stacked device
+    slabs. ``backing`` maps uid -> fp32 trainable tree (the training
+    plane's output — see :func:`personalized_trainables`); a miss
+    quantizes from it and writes one slot, a hit is pure bookkeeping.
+
+    ``max_entries`` is the global resident capacity. Each slab family
+    allocates ``max_entries`` slots (families appear lazily, and a
+    single-family population — the common case — is exactly sized);
+    the *global* LRU never lets total residency exceed ``max_entries``.
+    """
+
+    def __init__(self, backing: Mapping[int, Any], *, max_entries: int,
+                 quant_bits: int = 8,
+                 runtime: Optional[runtime_lib.ProgramRuntime] = None):
+        if max_entries < 1:
+            raise ValueError(
+                f"max_entries={max_entries} must be >= 1")
+        if quant_bits not in (0, 4, 8):
+            raise ValueError(
+                f"quant_bits={quant_bits} must be 0, 4 or 8")
+        self.backing = backing
+        self.max_entries = int(max_entries)
+        self.quant_bits = int(quant_bits)
+        self.runtime = runtime if runtime is not None else \
+            runtime_lib.ProgramRuntime()
+        # uid -> (family key, slot); OrderedDict order IS the LRU order
+        self._res: "OrderedDict[int, Tuple[Tuple, int]]" = OrderedDict()
+        self._fams: Dict[Tuple, Dict[str, Any]] = {}
+
+    # -- residency -----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._res)
+
+    def resident(self) -> Tuple[int, ...]:
+        """Resident uids, least-recently-used first."""
+        return tuple(self._res)
+
+    def fetch(self, uid: int) -> Tuple[Tuple, int]:
+        """Return (family key, slot) for ``uid``, admitting (and, at
+        capacity, evicting the global LRU) on a miss. Fetching the at
+        most ``max_entries`` distinct users of one flight in order is
+        safe: a fetched user moves to MRU, so admissions later in the
+        same flight can never evict an earlier one."""
+        uid = int(uid)
+        ent = self._res.get(uid)
+        if ent is not None:
+            self._res.move_to_end(uid)
+            self.runtime.count(STORE_KIND, "hits")
+            return ent
+        self.runtime.count(STORE_KIND, "misses")
+        if uid not in self.backing:
+            raise KeyError(f"uid {uid} has no trained adapter in the "
+                           "backing map")
+        qtree = quantize_at_rest(
+            jax.tree.map(jnp.asarray, self.backing[uid]),
+            bits=self.quant_bits)
+        famk = _family_key(qtree)
+        fam = self._fams.get(famk)
+        if fam is None:
+            fam = {"slabs": _slab_like(qtree, self.max_entries),
+                   "free": list(range(self.max_entries - 1, -1, -1)),
+                   "use_lora": "lora" in self.backing[uid]}
+            self._fams[famk] = fam
+        if len(self._res) >= self.max_entries:
+            old_uid, (old_famk, old_slot) = self._res.popitem(last=False)
+            self._fams[old_famk]["free"].append(old_slot)
+            self.runtime.count(STORE_KIND, "evictions")
+        slot = fam["free"].pop()
+        fam["slabs"] = _slab_set(fam["slabs"], slot, qtree)
+        self._res[uid] = (famk, slot)
+        return famk, slot
+
+    # -- serve-program inputs ------------------------------------------
+    def family(self, famk: Tuple) -> Dict[str, Any]:
+        """Family record: ``slabs`` (the device slab tree the serve
+        program gathers from) and ``use_lora``."""
+        return self._fams[famk]
+
+    # -- accounting ----------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        k = self.runtime.stats().get(STORE_KIND, {})
+        return {"hits": int(k.get("hits", 0)),
+                "misses": int(k.get("misses", 0)),
+                "evictions": int(k.get("evictions", 0)),
+                "resident": len(self._res),
+                "families": len(self._fams)}
+
+    def hit_rate(self) -> float:
+        s = self.stats()
+        n = s["hits"] + s["misses"]
+        return s["hits"] / n if n else 0.0
+
+    def bytes_at_rest(self) -> int:
+        """True stored bytes of the occupied slots (packed QTensor
+        payloads + fp leaves), i.e. per-resident-user cost x residency
+        — the number the quantized-at-rest claim is about."""
+        if not self._res:
+            return 0
+        total = 0
+        per_fam: Dict[Tuple, int] = {}
+        for famk, _ in self._res.values():
+            if famk not in per_fam:
+                slabs = self._fams[famk]["slabs"]
+                per_fam[famk] = qlib.tree_bytes(
+                    take_rows(slabs, jnp.asarray([0])))
+            total += per_fam[famk]
+        return int(total)
+
+
+def personalized_trainables(engine, global_tr, key, *,
+                            uid_offset: int = 0) -> Dict[int, Any]:
+    """Train every client of a built :class:`~repro.fl.cohort
+    .CohortEngine` one wave from ``global_tr`` and return the
+    **personalized** per-user trees ``global + dequant(delta_i)`` —
+    the training->serving handoff. Uids are client positions (plus
+    ``uid_offset`` so mixed-tenancy demos can merge families into one
+    backing map)."""
+    sel = np.arange(engine.n_clients)
+    delta, _ = engine.run_wave(global_tr, sel, key)
+    out = {}
+    for i in range(engine.n_clients):
+        d = qlib.dequantize_tree(
+            cohort_lib.slice_client_delta(delta, i), jnp.float32)
+        out[uid_offset + i] = jax.tree.map(
+            lambda g, dd: (g + dd).astype(jnp.float32), global_tr, d)
+    return out

@@ -35,7 +35,6 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Dict, List
 
 import jax
@@ -121,20 +120,25 @@ _CLIP_CACHE: Dict = {}
 
 
 def pretrained_clip(dataset: str, ccfg: clip_lib.CLIPConfig, *,
-                    seed: int = 1234, steps: int = 300, batch: int = 64):
+                    seed: int = 1234, steps: int = 300, batch: int = 64,
+                    runtime=None):
     """CLIP_pre stand-in: contrastively pretrain the dual encoder on a
     large balanced synthetic corpus (real CLIP weights are unavailable
     offline — DESIGN.md §7). Cached so all strategy arms share the exact
     same frozen backbone.
 
-    The whole pretraining run is one jitted ``lax.scan`` with donated
-    (params, opt) buffers — all batch indices are drawn up front (same
-    MT19937 sequence as the former per-step loop) and the corpus is
-    staged on device once.
+    The whole pretraining run is one ``adam_scan`` program with donated
+    (params, opt) buffers, compiled through the shared program runtime
+    (kind ``clip_pretrain``) — all batch indices are drawn up front
+    (same MT19937 sequence as the former per-step loop) and the corpus
+    is staged on device once. The params cache means a process's first
+    run charges the compile; later cache hits charge nothing (the
+    program never re-runs).
     """
     key = (dataset, seed, steps)
     if key in _CLIP_CACHE:
         return _CLIP_CACHE[key]
+    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime()
     pre = make_dataset(dataset, n_per_class=80, seed=seed,
                        longtail_gamma=1.0)
     params = clip_lib.init_clip(jax.random.PRNGKey(seed), ccfg)
@@ -145,22 +149,25 @@ def pretrained_clip(dataset: str, ccfg: clip_lib.CLIPConfig, *,
     imgs = jnp.asarray(pre["images"])
     toks = jnp.asarray(pre["tokens"])
 
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def train(params, opt, imgs, toks, idx):
-        def grad_fn(p, ix):
-            loss, g = jax.value_and_grad(
-                lambda q: clip_lib.contrastive_loss(
-                    q, ccfg, imgs[ix], toks[ix]))(p)
-            return g, loss
-        return optim.adam_scan(grad_fn, params, opt, idx, lr=1e-3,
-                               grad_clip=1.0)[:2]
+    def build():
+        def train(params, opt, imgs, toks, idx):
+            def grad_fn(p, ix):
+                loss, g = jax.value_and_grad(
+                    lambda q: clip_lib.contrastive_loss(
+                        q, ccfg, imgs[ix], toks[ix]))(p)
+                return g, loss
+            return optim.adam_scan(grad_fn, params, opt, idx, lr=1e-3,
+                                   grad_clip=1.0)[:2]
+        return train
 
-    params, _ = train(params, opt, imgs, toks, idx)
+    args = (params, opt, imgs, toks, idx)
+    params, _ = rt.compile("clip_pretrain", build, args,
+                           static_key=(ccfg,),
+                           donate_argnums=(0, 1))(*args)
     _CLIP_CACHE[key] = params
     return params
 
 
-@partial(jax.jit, static_argnums=(2,))
 def _eval_stats(frozen, trainable, ccfg, class_emb, imgs, labs, mask):
     """Summed eval statistics over fixed-shape (n_batches, batch, ...)
     tensors; padding rows carry mask 0. One compile per run — the scan
@@ -186,7 +193,13 @@ def _eval_stats(frozen, trainable, ccfg, class_emb, imgs, labs, mask):
     return acc, loss, tail_hit, tail_n
 
 
-def _server_eval(frozen, trainable, ccfg, class_emb, eval_set, batch=128):
+def _server_eval(frozen, trainable, ccfg, class_emb, eval_set,
+                 batch=128, runtime=None):
+    """Server-side eval through the shared program runtime (kind
+    ``server_eval``) so ``History.meta`` ledgers cover the eval program
+    like every other fused program; a ``runtime=None`` call (standalone
+    scripts) still compiles, it just discards the accounting."""
+    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime()
     imgs, labs = eval_set["images"], eval_set["labels"]
     n = len(labs)
     nb = -(-n // batch)
@@ -196,11 +209,17 @@ def _server_eval(frozen, trainable, ccfg, class_emb, eval_set, batch=128):
     labs_p = np.concatenate([labs, np.zeros((pad,), labs.dtype)])
     mask = np.concatenate([np.ones(n, np.float32), np.zeros(pad,
                                                             np.float32)])
-    acc, loss, tail_hit, tail_n = _eval_stats(
-        frozen, trainable, ccfg, class_emb,
-        jnp.asarray(imgs_p.reshape(nb, batch, *imgs.shape[1:])),
-        jnp.asarray(labs_p.reshape(nb, batch)),
-        jnp.asarray(mask.reshape(nb, batch)))
+    args = (frozen, trainable, class_emb,
+            jnp.asarray(imgs_p.reshape(nb, batch, *imgs.shape[1:])),
+            jnp.asarray(labs_p.reshape(nb, batch)),
+            jnp.asarray(mask.reshape(nb, batch)))
+
+    def build():
+        return lambda fz, tr, ce, im, lb, mk: _eval_stats(
+            fz, tr, ccfg, ce, im, lb, mk)
+
+    acc, loss, tail_hit, tail_n = rt.compile(
+        "server_eval", build, args, static_key=(ccfg,))(*args)
     return (float(acc) / n, float(loss) / n,
             float(tail_hit) / max(float(tail_n), 1.0))
 
@@ -213,8 +232,15 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
     eval_set = make_eval_set(cfg.dataset, seed=cfg.seed + 1)
     spec = data["spec"]
 
+    # one program runtime per run (unless the caller shares one across
+    # runs — shape sweeps then share compiles): every fused program —
+    # pretraining, rounds, staging, sampling, fleet-GAN, eval —
+    # compiles through it, and meta reports its unified breakdown
+    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime(
+        max_entries=cfg.runtime_cache_entries)
+
     ccfg = clip_lib.CLIPConfig()
-    frozen = pretrained_clip(cfg.dataset, ccfg, seed=1234)
+    frozen = pretrained_clip(cfg.dataset, ccfg, seed=1234, runtime=rt)
     if strat.backbone_bits:
         # QLoRA: frozen backbone stored blockwise-quantized, dequantized
         # on the fly inside the forward (jnp path of the quant kernels)
@@ -250,13 +276,6 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
                                     seed=cfg.seed)
     for i, c in enumerate(clients):
         c.step_mult = int(trace.step_mult[i])
-    # one program runtime per run (unless the caller shares one across
-    # runs — shape sweeps then share compiles): every fused program of
-    # the cohort and fleet-GAN engines compiles through it, and meta
-    # reports its unified n_compiles/compile-time breakdown
-    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime(
-        max_entries=cfg.runtime_cache_entries)
-
     # chaos fault schedule: one deterministic ChaosSchedule per run,
     # keyed off its own fold of the run seed (disjoint from the round /
     # warmup / GAN streams), shared by the scheduler and both executors
@@ -448,7 +467,8 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
         hist.util_proxy.append(hist.meta["util_proxy_const"])
         if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
             acc, loss, tail = _server_eval(frozen, global_tr, ccfg,
-                                           class_emb, eval_set)
+                                           class_emb, eval_set,
+                                           runtime=rt)
             hist.rounds.append(rnd)
             hist.server_acc.append(acc)
             hist.server_loss.append(loss)

@@ -5,6 +5,12 @@ dry-runs lower at production scale.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-3-4b \
       --batch 4 --prompt-len 64 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --adapters 8 --requests 48
+
+``--adapters N`` switches into the personalized-adapter serving plane
+(:mod:`repro.fl.serve`): train N per-user adapter trees, replay a
+Zipf/diurnal request trace through the multi-tenant batched engine, and
+print virtual-latency percentiles plus cache/compile ledgers.
 """
 from __future__ import annotations
 
@@ -19,7 +25,23 @@ from repro.configs import get_config, get_reduced
 from repro.models import build_model
 
 
-def main():
+def select_token(logits, *, greedy: bool, temperature: float = 1.0,
+                 key=None):
+    """One decode-step token choice over ``logits (B, V)``: argmax when
+    ``greedy``, else temperature-scaled categorical sampling (requires a
+    PRNG ``key``). Returns ``(B, 1) int32``."""
+    if greedy:
+        tok = jnp.argmax(logits, -1)
+    else:
+        if key is None:
+            raise ValueError("sampling needs a PRNG key")
+        if temperature <= 0:
+            raise ValueError("temperature must be > 0 when sampling")
+        tok = jax.random.categorical(key, logits / temperature, axis=-1)
+    return tok[:, None].astype(jnp.int32)
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--batch", type=int, default=4)
@@ -27,8 +49,57 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--quant", type=int, default=0, choices=[0, 4, 8])
     ap.add_argument("--full-config", action="store_true")
-    ap.add_argument("--greedy", action="store_true", default=True)
-    args = ap.parse_args()
+    ap.add_argument("--greedy", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="argmax decode (default); --no-greedy samples")
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="sampling temperature (with --no-greedy)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--adapters", type=int, default=0, metavar="N",
+                    help="serve N personalized adapter tenants instead "
+                         "of the token-decode path")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="trace length for --adapters mode")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="serve flight cap for --adapters mode")
+    ap.add_argument("--cache-entries", type=int, default=0,
+                    help="adapter-cache capacity (0 = full population)")
+    return ap
+
+
+def run_adapter_mode(args) -> None:
+    from repro.fl import serve as serve_lib
+
+    n = args.adapters
+    cap = args.cache_entries or None
+    plane = serve_lib.demo_plane(
+        n, mixed=n >= 2, seed=args.seed, quant_bits=args.quant or 8,
+        max_entries=cap, max_batch=args.max_batch)
+    trace = serve_lib.zipf_request_trace(
+        n, args.requests, seed=args.seed, rate=200.0, period=1.0,
+        amplitude=0.5)
+    images = serve_lib.request_images(plane, trace, seed=args.seed)
+    rec = serve_lib.replay(plane["engine"], trace, images)
+    st = plane["store"].stats()
+    print(f"adapters={n} requests={rec['n_requests']} "
+          f"concurrency={rec['concurrency']} trace={rec['trace']}")
+    print(f"flights={rec['n_flights']} "
+          f"lat_v p50={rec['lat_v_p50']*1e3:.2f}ms "
+          f"p99={rec['lat_v_p99']*1e3:.2f}ms "
+          f"throughput={rec['throughput_v']:.0f} req/vs")
+    print(f"cache: hits={st['hits']} misses={st['misses']} "
+          f"evictions={st['evictions']} "
+          f"hit_rate={rec['store']['hit_rate']:.2f} "
+          f"bytes_at_rest={plane['store'].bytes_at_rest()}")
+    for kind, row in sorted(plane["runtime"].stats().items()):
+        print(f"ledger {kind}: {row}")
+
+
+def main():
+    args = build_parser().parse_args()
+    if args.adapters:
+        run_adapter_mode(args)
+        return
 
     cfg = (get_config if args.full_config else get_reduced)(args.arch)
     if args.quant:
@@ -53,23 +124,30 @@ def main():
     prefill = jax.jit(lambda f, t, b: model.prefill(f, t, b,
                                                     max_len=max_len))
     decode = jax.jit(model.decode_step)
+    key = jax.random.PRNGKey(args.seed)
 
     t0 = time.time()
     logits, cache = jax.block_until_ready(prefill(frozen, tr, batch))
     t_prefill = time.time() - t0
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    key, k = jax.random.split(key)
+    tok = select_token(logits, greedy=args.greedy,
+                       temperature=args.temperature, key=k)
     out = [tok]
     pos0 = P + (cfg.n_patches if cfg.family == "vlm" else 0)
     t0 = time.time()
     for i in range(G - 1):
         logits, cache = decode(frozen, tr, cache, tok,
                                jnp.asarray(pos0 + i, jnp.int32))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        key, k = jax.random.split(key)
+        tok = select_token(logits, greedy=args.greedy,
+                           temperature=args.temperature, key=k)
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
     toks = np.asarray(jnp.concatenate(out, 1))
-    print(f"arch={cfg.name} batch={B} prompt={P} gen={G}")
+    mode = "greedy" if args.greedy else \
+        f"sample(T={args.temperature:g})"
+    print(f"arch={cfg.name} batch={B} prompt={P} gen={G} mode={mode}")
     print(f"prefill: {t_prefill*1e3:.1f} ms "
           f"({B*P/t_prefill:.0f} tok/s)")
     print(f"decode : {t_decode*1e3:.1f} ms total, "

@@ -325,3 +325,72 @@ def test_simulator_sequential_gan_engine_stays_available():
             dataset="pacs", strategy="tripleplay", n_clients=2,
             rounds=1, local_steps=2, n_per_class=12, batch_size=8,
             gan_steps=4, lr=3e-3, gan_engine="bogus"))
+
+
+# -- FleetGANConfig opt-out (per-group exact programs) ------------------
+
+def test_bucket_optout_matches_bucketed_and_sequential():
+    """``FleetGANConfig(bucket_batches=False)`` must reproduce the
+    default bucketed prep (fused-kernel tolerance) while paying one
+    train compile per distinct batch-size group instead of one total —
+    and its RNG stream is bitwise the sequential ``prepare_gan`` one."""
+    from repro.fl import runtime as runtime_lib
+
+    sizes = (24, 21, 24)          # two distinct gan_batch_size groups
+    steps = 6
+    keys = [jax.random.PRNGKey(300 + i) for i in range(len(sizes))]
+    A, B, S = _mk_clients(sizes), _mk_clients(sizes), _mk_clients(sizes)
+
+    rt_a = runtime_lib.ProgramRuntime()
+    rep_a = fleetgan.prepare_gan_fleet(A, keys, steps=steps,
+                                       runtime=rt_a)
+    rt_b = runtime_lib.ProgramRuntime()
+    rep_b = fleetgan.prepare_gan_fleet(
+        B, keys, steps=steps,
+        fleet_cfg=fleetgan.FleetGANConfig(bucket_batches=False),
+        runtime=rt_b)
+    for i, c in enumerate(S):
+        c.prepare_gan(keys[i], steps=steps)
+
+    n_groups = len({strategies_lib.gan_batch_size(n) for n in sizes})
+    assert n_groups == 2
+    assert rt_a.stats()["gan_train"]["n_compiles"] == 1
+    assert rt_b.stats()["gan_train"]["n_compiles"] == n_groups
+    assert len(rep_b.groups) == n_groups
+    assert sum(g for _, g in rep_b.groups) == rep_b.n_eligible
+    assert sorted(rep_b.d_loss) == sorted(rep_a.d_loss)
+    for i in rep_a.d_loss:
+        assert rep_a.d_loss[i] == pytest.approx(rep_b.d_loss[i],
+                                                abs=2e-2)
+    for i, (a, b, s) in enumerate(zip(A, B, S)):
+        np.testing.assert_array_equal(a.aug_labels, b.aug_labels,
+                                      err_msg=f"client {i} labels")
+        for (pth, la), lb, ls in zip(
+                jax.tree_util.tree_leaves_with_path(a.gan_params),
+                jax.tree.leaves(b.gan_params),
+                jax.tree.leaves(s.gan_params)):
+            np.testing.assert_allclose(
+                np.asarray(la), np.asarray(lb), atol=2e-3, rtol=0,
+                err_msg=f"client {i}{jax.tree_util.keystr(pth)}")
+            np.testing.assert_allclose(
+                np.asarray(lb), np.asarray(ls), atol=2e-3, rtol=0,
+                err_msg=f"client {i} vs seq{jax.tree_util.keystr(pth)}")
+
+
+def test_bucket_optout_skips_ineligible_clients():
+    """Under the opt-out, ineligible clients are left out of the group
+    programs entirely (no masked riders) and keep their GAN fields
+    unset — same observable contract as the bucketed path."""
+    sizes = (24, 5, 12)           # middle client below GAN_MIN_POOL
+    clients = _mk_clients(sizes)
+    keys = [jax.random.PRNGKey(i) for i in range(len(sizes))]
+    rep = fleetgan.prepare_gan_fleet(
+        clients, keys, steps=4,
+        fleet_cfg=fleetgan.FleetGANConfig(bucket_batches=False))
+    assert rep.n_eligible == 2
+    assert sum(g for _, g in rep.groups) == 2   # no masked riders
+    assert clients[1].gan_params is None
+    assert clients[1].aug_images is None
+    assert clients[0].gan_params is not None
+    assert clients[2].gan_params is not None
+    assert 1 not in rep.d_loss

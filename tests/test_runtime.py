@@ -235,3 +235,45 @@ def test_mean_corrected_padded_step_matches_unpadded(n, pad, seed):
             np.testing.assert_allclose(
                 a, b, atol=1e-5, rtol=0,
                 err_msg=jax.tree_util.keystr(path))
+
+
+# -- every fused program reports through one ledger ---------------------
+
+def test_pretrain_and_eval_route_through_runtime_ledger():
+    """``pretrained_clip`` (adam_scan) and ``_server_eval`` compile
+    through the shared ProgramRuntime, so History.meta's by-kind ledger
+    covers them next to the round/staging kinds — no fused program runs
+    off the books."""
+    from repro.fl import simulator as sim
+
+    # a (dataset, seed, steps) key no other test uses, so _CLIP_CACHE
+    # can't short-circuit the compile
+    rt = runtime_lib.ProgramRuntime()
+    ccfg = clip_lib.CLIPConfig()
+    sim.pretrained_clip("pacs", ccfg, seed=4321, steps=3, batch=8,
+                        runtime=rt)
+    st = rt.stats()
+    assert st["clip_pretrain"]["n_compiles"] == 1
+    assert st["clip_pretrain"]["compile_time_s"] > 0
+
+    # clip_pretrain appears in the run's meta too unless an earlier
+    # test in the process already warmed the params cache (then the
+    # program never re-runs)
+    was_cached = ("pacs", 1234, 300) in sim._CLIP_CACHE
+    h = sim.run_federated(sim.FLConfig(
+        dataset="pacs", strategy="qlora_nogan", n_clients=2, rounds=1,
+        local_steps=2, n_per_class=12, batch_size=8, lr=3e-3))
+    kinds = h.meta["n_compiles_by_kind"]
+    assert kinds.get("server_eval", 0) >= 1
+    if not was_cached:
+        assert kinds.get("clip_pretrain", 0) >= 1
+
+
+def test_count_accumulates_auxiliary_counters():
+    rt = runtime_lib.ProgramRuntime()
+    rt.count("serve_store", "hits")
+    rt.count("serve_store", "hits", 2)
+    rt.count("serve_store", "misses")
+    st = rt.stats()["serve_store"]
+    assert st["hits"] == 3 and st["misses"] == 1
+    assert st["n_compiles"] == 0          # counters don't fake compiles

@@ -1,0 +1,301 @@
+"""Personalized-adapter serving plane (fl.serve): batched-vs-sequential
+parity across mixed tenant families, quantized-at-rest round trips, LRU
+eviction correctness under overflow traces, bucket-reuse compile counts,
+and the virtual-time replay determinism contract.
+
+The heavy fixture (one trained mixed-tenancy plane) is module-scoped:
+every test reuses the same backing trees and builds cheap secondary
+stores/engines over them instead of retraining.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant as qlib
+from repro.fl import runtime as runtime_lib
+from repro.fl import serve as serve_lib
+from repro.fl.serve import engine as engine_lib
+from repro.fl.serve import store as store_lib
+
+N_USERS = 6
+
+
+@pytest.fixture(scope="module")
+def plane():
+    return serve_lib.demo_plane(
+        N_USERS, mixed=True, seed=0, quant_bits=8, max_batch=4,
+        n_per_class=12)
+
+
+def _engine_over(plane, *, quant_bits, max_entries=None, max_batch=4,
+                 runtime=None):
+    """A fresh store + engine over the fixture's trained backing —
+    no retraining, independent runtime/ledger when asked."""
+    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime()
+    store = store_lib.AdapterStore(
+        plane["backing"], max_entries=max_entries or N_USERS,
+        quant_bits=quant_bits, runtime=rt)
+    eng = engine_lib.ServeEngine(
+        frozen=plane["frozen"], ccfg=plane["ccfg"],
+        class_emb=plane["class_emb"], store=store,
+        cfg=engine_lib.ServeConfig(max_batch=max_batch))
+    return eng
+
+
+def _requests(plane, uids, *, seed=0):
+    rs = np.random.RandomState(seed)
+    pool = plane["images"]
+    return [(int(u), pool[rs.randint(0, len(pool))]) for u in uids]
+
+
+def _oracle(plane, requests):
+    return engine_lib.serve_sequential(
+        plane["frozen"], plane["ccfg"], plane["class_emb"],
+        plane["backing"], requests)
+
+
+# -- parity ------------------------------------------------------------
+
+def test_mixed_tenant_parity_quantized(plane):
+    # every tenant of both families in one stream; int8-at-rest logits
+    # must track the fp32 sequential oracle
+    reqs = _requests(plane, [0, 3, 1, 4, 2, 5, 0, 3], seed=1)
+    out, info = plane["engine"].serve(reqs)
+    ref = _oracle(plane, reqs)
+    assert out.shape == ref.shape == (len(reqs), plane["n_classes"])
+    assert np.max(np.abs(out - ref)) < 5e-2
+    # the mixed flight really split by family (adapter-only + LoRA)
+    assert info["groups"] > info["flights"]
+
+
+def test_unquantized_store_is_tight(plane):
+    # quant_bits=0 keeps the slabs fp32: the only difference from the
+    # oracle is the S=1 closed-form head, which is exact reduction —
+    # tolerance is fp noise
+    eng = _engine_over(plane, quant_bits=0)
+    reqs = _requests(plane, [5, 0, 2, 4], seed=2)
+    out, _ = eng.serve(reqs)
+    ref = _oracle(plane, reqs)
+    assert np.max(np.abs(out - ref)) < 1e-4
+
+
+def test_flight_wider_than_store_rejected(plane):
+    with pytest.raises(ValueError, match="max_entries"):
+        _engine_over(plane, quant_bits=8, max_entries=2, max_batch=4)
+
+
+# -- quantized at rest -------------------------------------------------
+
+def test_quantize_at_rest_roundtrip(plane):
+    tr = jax.tree.map(jnp.asarray, plane["backing"][0])
+    q8 = store_lib.quantize_at_rest(tr, bits=8)
+    # eligible 2-D adapter mats became QTensors, biases stayed fp
+    leaves = jax.tree.leaves(q8, is_leaf=lambda l: isinstance(
+        l, qlib.QTensor))
+    assert any(isinstance(l, qlib.QTensor) for l in leaves)
+    assert all(l.ndim == 1 for l in leaves
+               if not isinstance(l, qlib.QTensor))
+    deq = qlib.dequantize_tree(q8, jnp.float32)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(tr),
+                              jax.tree.leaves(deq)))
+    assert err < 5e-2
+    # bits=0 is identity (the fp store mode)
+    q0 = store_lib.quantize_at_rest(tr, bits=0)
+    assert all(not isinstance(l, qlib.QTensor)
+               for l in jax.tree.leaves(
+                   q0, is_leaf=lambda l: isinstance(l, qlib.QTensor)))
+    # quantization shrinks the at-rest footprint
+    assert qlib.tree_bytes(q8) < qlib.tree_bytes(q0)
+
+
+def test_store_rejects_bad_config(plane):
+    with pytest.raises(ValueError, match="max_entries"):
+        store_lib.AdapterStore(plane["backing"], max_entries=0)
+    with pytest.raises(ValueError, match="quant_bits"):
+        store_lib.AdapterStore(plane["backing"], max_entries=2,
+                               quant_bits=3)
+
+
+# -- LRU eviction ------------------------------------------------------
+
+def test_lru_eviction_under_overflow_stays_correct(plane):
+    # capacity 3 over a 6-user population: the stream forces evictions;
+    # every re-admission re-quantizes from backing, so answers still
+    # match the oracle
+    eng = _engine_over(plane, quant_bits=8, max_entries=3, max_batch=2)
+    uids = [0, 1, 2, 3, 4, 5, 0, 1, 5, 5, 2, 0]
+    reqs = _requests(plane, uids, seed=3)
+    out, _ = eng.serve(reqs)
+    st = eng.store.stats()
+    assert st["evictions"] > 0
+    assert st["resident"] <= 3
+    assert st["hits"] + st["misses"] == len(reqs)
+    # misses beyond capacity each evicted exactly one resident
+    assert st["evictions"] == st["misses"] - st["resident"]
+    ref = _oracle(plane, reqs)
+    assert np.max(np.abs(out - ref)) < 5e-2
+
+
+def test_lru_order_and_flight_safety(plane):
+    eng = _engine_over(plane, quant_bits=8, max_entries=3, max_batch=3)
+    s = eng.store
+    for u in (0, 1, 2):
+        s.fetch(u)
+    assert s.resident() == (0, 1, 2)
+    s.fetch(0)                       # hit: 0 becomes MRU
+    assert s.resident() == (1, 2, 0)
+    s.fetch(3)                       # evicts 1 (global LRU)
+    assert 1 not in s.resident() and s.resident()[-1] == 3
+    # one full-width flight of distinct users never self-evicts: all
+    # three fetched users are resident afterwards
+    for u in (4, 5, 0):
+        s.fetch(u)
+    assert set(s.resident()) == {4, 5, 0}
+
+
+def test_unknown_uid_raises(plane):
+    eng = _engine_over(plane, quant_bits=8)
+    with pytest.raises(KeyError, match="no trained adapter"):
+        eng.store.fetch(N_USERS + 7)
+
+
+# -- compile reuse -----------------------------------------------------
+
+def test_request_size_sweep_reuses_one_serve_compile(plane):
+    # R in {2, 3, 4} with max_batch=4 all bucket to width 4: the sweep
+    # must compile exactly ONE serve program (per family; we stay in
+    # the adapter-only family) — a second compile means request-shape
+    # bucketing regressed
+    rt = runtime_lib.ProgramRuntime()
+    eng = _engine_over(plane, quant_bits=8, max_batch=4, runtime=rt)
+    fam0 = [0, 1, 2]                 # adapter-only tenants
+    for r in (2, 3, 4):
+        eng.serve(_requests(plane, fam0[:r] + fam0[:max(0, r - 3)],
+                            seed=r))
+    st = rt.stats()[engine_lib.SERVE_KIND]
+    assert st["n_compiles"] == 1
+    assert st["n_groups"] == 3
+    assert st["n_requests"] == 2 + 3 + 4
+
+
+def test_batched_plane_not_degenerate(plane):
+    # the CI smoke's contract: dispatches (fused programs) must be
+    # strictly fewer than requests answered
+    eng = plane["engine"]
+    assert eng.n_requests > 0
+    assert eng.n_dispatches < eng.n_requests
+
+
+# -- traces + replay ---------------------------------------------------
+
+def test_zipf_trace_shape_and_determinism():
+    a = serve_lib.zipf_request_trace(8, 40, seed=5, period=1.0,
+                                     amplitude=0.5)
+    b = serve_lib.zipf_request_trace(8, 40, seed=5, period=1.0,
+                                     amplitude=0.5)
+    assert np.array_equal(a.uid, b.uid)
+    assert np.array_equal(a.t, b.t)
+    assert a.n == 40 and a.concurrency() <= 8
+    assert np.all(np.diff(a.t) >= 0)
+    assert "diurnal" in a.name
+
+
+def test_trace_json_roundtrip(tmp_path):
+    tr = serve_lib.zipf_request_trace(5, 12, seed=9)
+    p = tmp_path / "trace.json"
+    serve_lib.save_request_trace(tr, p)
+    back = serve_lib.load_request_trace(p)
+    assert np.array_equal(tr.uid, back.uid)
+    assert np.allclose(tr.t, back.t)
+    assert back.n_users == 5 and back.name == tr.name
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="nondecreasing"):
+        serve_lib.RequestTrace(uid=np.asarray([0, 1]),
+                               t=np.asarray([1.0, 0.5]), n_users=2)
+    with pytest.raises(ValueError, match="uids outside"):
+        serve_lib.RequestTrace(uid=np.asarray([0, 7]),
+                               t=np.asarray([0.0, 1.0]), n_users=2)
+
+
+def test_replay_is_deterministic(plane):
+    # identical backing + trace through two independent engines: the
+    # virtual-clock schedule, latencies, and logits replay bitwise
+    trace = serve_lib.zipf_request_trace(N_USERS, 18, seed=4,
+                                         rate=300.0)
+    images = serve_lib.request_images(plane, trace, seed=4)
+    recs = []
+    for _ in range(2):
+        eng = _engine_over(plane, quant_bits=8, max_entries=4,
+                           max_batch=4)
+        recs.append(serve_lib.replay(eng, trace, images))
+    a, b = recs
+    assert a["n_flights"] == b["n_flights"]
+    assert [f["n"] for f in a["flights"]] == \
+        [f["n"] for f in b["flights"]]
+    assert [f["bucket"] for f in a["flights"]] == \
+        [f["bucket"] for f in b["flights"]]
+    assert np.array_equal(a["lat_v"], b["lat_v"])
+    assert np.array_equal(a["logits"], b["logits"])
+    assert a["store"] == b["store"]
+    # latency stats are consistent with the raw vector
+    assert a["lat_v_p50"] == pytest.approx(
+        float(np.percentile(a["lat_v"], 50)))
+    # every request waits at least one service dispatch
+    from repro.fl.serve.driver import SERVICE_C0
+    assert a["lat_v"].min() >= SERVICE_C0
+
+
+def test_replay_matches_oracle_and_counts_store(plane):
+    trace = serve_lib.zipf_request_trace(N_USERS, 16, seed=6,
+                                         rate=300.0)
+    images = serve_lib.request_images(plane, trace, seed=6)
+    eng = _engine_over(plane, quant_bits=8)
+    rec = serve_lib.replay(eng, trace, images)
+    ref = _oracle(plane, [(int(u), im)
+                          for u, im in zip(trace.uid, images)])
+    assert np.max(np.abs(rec["logits"] - ref)) < 5e-2
+    st = rec["store"]
+    assert st["hits"] + st["misses"] == trace.n
+    assert st["misses"] == trace.concurrency()   # capacity = population
+    assert 0.0 <= st["hit_rate"] <= 1.0
+
+
+def test_replay_rejects_misaligned_images(plane):
+    trace = serve_lib.zipf_request_trace(N_USERS, 4, seed=0)
+    with pytest.raises(ValueError, match="align"):
+        serve_lib.replay(plane["engine"], trace,
+                         plane["images"][:2])
+
+
+# -- launch/serve CLI --------------------------------------------------
+
+def test_select_token_greedy_and_sampling():
+    from repro.launch.serve import select_token
+    logits = jnp.asarray([[0.0, 5.0, 1.0], [9.0, 0.0, 1.0]])
+    tok = select_token(logits, greedy=True)
+    assert tok.shape == (2, 1) and tok.dtype == jnp.int32
+    assert tok[:, 0].tolist() == [1, 0]
+    key = jax.random.PRNGKey(0)
+    s1 = select_token(logits, greedy=False, temperature=0.5, key=key)
+    s2 = select_token(logits, greedy=False, temperature=0.5, key=key)
+    assert np.array_equal(s1, s2)          # deterministic in the key
+    with pytest.raises(ValueError, match="PRNG key"):
+        select_token(logits, greedy=False)
+    with pytest.raises(ValueError, match="temperature"):
+        select_token(logits, greedy=False, temperature=0.0, key=key)
+
+
+def test_serve_parser_greedy_flag_is_live():
+    from repro.launch.serve import build_parser
+    ap = build_parser()
+    assert ap.parse_args([]).greedy is True
+    assert ap.parse_args(["--greedy"]).greedy is True
+    # the regression: --no-greedy must actually flip it
+    ns = ap.parse_args(["--no-greedy", "--temperature", "0.7"])
+    assert ns.greedy is False and ns.temperature == 0.7
+    assert ap.parse_args(["--adapters", "4"]).adapters == 4
