@@ -42,6 +42,16 @@ time, the final virtual-clock time (where the policies actually
 diverge — a sync barrier pays every straggler, the async buffer does
 not), the final tail accuracy, and the fault ledger.
 
+A fifth section (``mesh_points``) re-execs this script in a child
+interpreter with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the flag must be set before jax imports) and times the mesh-scaled
+runtime: a **1024-client population** running sync-partial K=64 rounds
+with the cohort axis sharded over an 8-device data mesh (hierarchical
+tree aggregation, shard-multiple width buckets) plus a sharded
+fleet-GAN prep next to its unsharded twin, each with its compile
+ledger. These are the paper-scale benchmark points ROADMAP's
+mesh-scaling item asks for — real measurements, not aspirations.
+
 REPRO_BENCH_SCALE=quick (default) times 3 rounds per point; =paper 10.
 """
 from __future__ import annotations
@@ -49,6 +59,8 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import subprocess
+import sys
 import time
 
 import jax
@@ -207,6 +219,124 @@ def time_gan_fleet(n_clients: int) -> fleetgan.FleetGANReport:
         clients, _gan_keys(len(clients)), steps=GAN_STEPS)
 
 
+MESH_DEVICES = 8
+MESH_N_CLIENTS = 1024
+MESH_K = 64
+MESH_GAN_N = 16
+_MESH_MARK = "MESH_JSON::"
+
+
+def _mesh_child():
+    """Runs in the forced-8-device child interpreter: the mesh-scale
+    benchmark points. Prints one marker-prefixed JSON line the parent
+    collects into ``results['mesh_points']``."""
+    from repro.fl import runtime as runtime_lib
+    from repro.launch.mesh import make_data_mesh
+
+    assert len(jax.devices()) >= MESH_DEVICES, jax.devices()
+    mesh = make_data_mesh(MESH_DEVICES)
+    out = {"n_devices": MESH_DEVICES, "backend": jax.default_backend()}
+
+    # -- 1024-client sync-partial round on the mesh -------------------
+    strat = STRATEGIES["fedclip"]
+    ccfg = clip_lib.CLIPConfig()
+    frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+    P = 2                     # images per client: population scale is
+    data = make_dataset(      # the point here, not per-client depth
+        "pacs", n_per_class=(MESH_N_CLIENTS * P + 6) // 7, seed=0,
+        longtail_gamma=1.0)
+    spec = data["spec"]
+    class_emb = clip_lib.text_embedding(
+        frozen, ccfg,
+        jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+    clients = [client_lib.Client(
+        cid=i, images=data["images"][P * i:P * i + P],
+        labels=data["labels"][P * i:P * i + P],
+        n_classes=spec.n_classes, strategy=strat)
+        for i in range(MESH_N_CLIENTS)]
+    tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg, strat)
+    rt = runtime_lib.ProgramRuntime()
+    t0 = time.perf_counter()
+    engine = cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(strategy=strat,
+                                    local_steps=LOCAL_STEPS,
+                                    batch_size=BATCH, lr=LR, mesh=mesh),
+        runtime=rt)
+    stage_s = time.perf_counter() - t0
+    shard_rows = engine.pool_staged.sharding.shard_shape(
+        engine.pool_staged.shape)[0]
+    assert shard_rows * MESH_DEVICES == MESH_N_CLIENTS, \
+        ("mesh bench silently unsharded", shard_rows)
+    sub, uplink = time_subset(engine, tr, MESH_K)
+    stats = rt.stats()
+    out["sync_partial_1024"] = {
+        "n_clients": MESH_N_CLIENTS, "clients_per_round": MESH_K,
+        "shards": engine.shards, "aggregation": "tree",
+        "bucket_width": cohort_lib.runtime_lib.bucket_width(
+            MESH_K, MESH_N_CLIENTS, shards=engine.shards),
+        "stage_s": stage_s, "subset_round_s": sub,
+        "uplink_bytes": uplink,
+        "n_compiles": rt.n_compiles,
+        "compile_time_s": rt.compile_time_s,
+        "n_round_compiles": int(stats["subset_round"]["n_compiles"])}
+
+    # -- sharded fleet-GAN vs its unsharded twin ----------------------
+    def mk_gan_clients():
+        gstrat = STRATEGIES["tripleplay"]
+        per = 24
+        return [client_lib.Client(
+            cid=i, images=data["images"][per * i:per * i + per],
+            labels=data["labels"][per * i:per * i + per],
+            n_classes=spec.n_classes, strategy=gstrat)
+            for i in range(MESH_GAN_N)]
+
+    keys = _gan_keys(MESH_GAN_N)
+    rep_u = fleetgan.prepare_gan_fleet(
+        mk_gan_clients(), keys, steps=GAN_STEPS,
+        runtime=runtime_lib.ProgramRuntime())
+    rt_s = runtime_lib.ProgramRuntime()
+    rep_s = fleetgan.prepare_gan_fleet(
+        mk_gan_clients(), keys, steps=GAN_STEPS,
+        fleet_cfg=fleetgan.FleetGANConfig(mesh=mesh), runtime=rt_s)
+    out["fleet_gan_sharded"] = {
+        "n_clients": MESH_GAN_N, "gan_steps": GAN_STEPS,
+        "shards": MESH_DEVICES,
+        "n_eligible": rep_s.n_eligible,
+        "groups": [list(g) for g in rep_s.groups],
+        "n_synth": rep_s.n_synth,
+        "sharded_prep_s": rep_s.prep_time_s,
+        "sharded_compile_s": rep_s.compile_time_s,
+        "unsharded_prep_s": rep_u.prep_time_s,
+        "unsharded_compile_s": rep_u.compile_time_s,
+        "gan_train_compiles":
+            int(rt_s.stats()["gan_train"]["n_compiles"])}
+    print(_MESH_MARK + json.dumps(out))
+
+
+def _run_mesh_points() -> dict:
+    """Re-exec this script with the 8-fake-device flag (it must be set
+    before jax initializes, hence the child interpreter)."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count"
+                  f"={MESH_DEVICES}",
+        PYTHONPATH=str(ROOT / "src") + (
+            os.pathsep + os.environ["PYTHONPATH"]
+            if os.environ.get("PYTHONPATH") else ""))
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--mesh-child"],
+        env=env, capture_output=True, text=True, cwd=str(ROOT))
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"mesh-points child failed:\n{proc.stderr[-4000:]}")
+    for line in proc.stdout.splitlines():
+        if line.startswith(_MESH_MARK):
+            return json.loads(line[len(_MESH_MARK):])
+    raise RuntimeError(
+        f"mesh-points child printed no result:\n{proc.stdout[-2000:]}")
+
+
 def main():
     results = {"config": {"local_steps": LOCAL_STEPS, "batch": BATCH,
                           "rounds_timed": ROUNDS,
@@ -338,6 +468,16 @@ def main():
               f" ms  vtime={point['vtime_final']:7.1f}  "
               f"tail_acc={point['tail_acc_final']:.3f}  "
               f"faults={sum(point['fault_ledger'].values())}")
+    # mesh-scale points (forced-8-device child interpreter)
+    results["mesh_points"] = _run_mesh_points()
+    sp, fg = (results["mesh_points"]["sync_partial_1024"],
+              results["mesh_points"]["fleet_gan_sharded"])
+    print(f"mesh 1024-client K={sp['clients_per_round']} "
+          f"round={sp['subset_round_s']*1e3:8.1f} ms  "
+          f"shards={sp['shards']}  compiles={sp['n_compiles']}")
+    print(f"mesh fleet-GAN n={fg['n_clients']} "
+          f"sharded={fg['sharded_prep_s']:7.2f} s  "
+          f"unsharded={fg['unsharded_prep_s']:7.2f} s")
     out = ROOT / "BENCH_fl_round.json"
     with open(out, "w") as f:
         json.dump(results, f, indent=1)
@@ -345,4 +485,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    if "--mesh-child" in sys.argv:
+        _mesh_child()
+    else:
+        main()

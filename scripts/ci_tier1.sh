@@ -120,6 +120,80 @@ print("async chaos smoke OK:", {"fault_ledger": led,
                                 "vtime": h.vtime})
 EOF
 
+# forced-8-device sharded smoke: the mesh-scaled round path must really
+# shard (fail loudly on a silent unsharded fallback), keep the K-sweep
+# compile-count bound with a mesh attached, and stay in parity with the
+# unsharded engine. XLA_FLAGS must be set before jax imports, hence the
+# dedicated interpreter.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF3'
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core import clip as clip_lib
+from repro.data.synthetic import class_tokens, make_dataset
+from repro.fl import client as client_lib, cohort as cohort_lib
+from repro.fl import runtime as runtime_lib
+from repro.fl.strategies import STRATEGIES
+from repro.launch.mesh import make_data_mesh
+
+assert len(jax.devices()) == 8, jax.devices()
+strat = STRATEGIES["fedclip"]
+ccfg = clip_lib.CLIPConfig()
+frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+data = make_dataset("pacs", n_per_class=12, seed=0, longtail_gamma=1.0)
+spec = data["spec"]
+class_emb = clip_lib.text_embedding(
+    frozen, ccfg,
+    jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+clients = [client_lib.Client(
+    cid=i, images=data["images"][4 * i:4 * i + 4],
+    labels=data["labels"][4 * i:4 * i + 4],
+    n_classes=spec.n_classes, strategy=strat) for i in range(16)]
+tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg, strat)
+
+rt = runtime_lib.ProgramRuntime()   # ONE runtime: sharded + unsharded
+mk = lambda mesh: cohort_lib.CohortEngine(
+    frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+    cfg=cohort_lib.CohortConfig(strategy=strat, local_steps=2,
+                                batch_size=4, lr=3e-3, mesh=mesh,
+                                donate=False),
+    runtime=rt)
+e_s, e_u = mk(make_data_mesh(8)), mk(None)
+
+# silent-fallback guard: the sharded engine's staged cohort arrays must
+# actually live on all 8 devices and aggregate through 8 shards
+assert e_s.shards == 8 and e_u.shards == 1
+assert len(e_s.pool_staged.sharding.device_set) == 8, \
+    ("sharded engine silently fell back to a single device",
+     e_s.pool_staged.sharding)
+
+# K sweep on the mesh: K=2 and K=3 both bucket to the 8-shard multiple
+# 8, so the sharded sweep adds exactly ONE subset-round program next to
+# the unsharded engine's one — 2 total, never colliding (cache keys
+# carry sharding identity), never recompiling per K
+sweep = {}
+for k in (2, 3):
+    sel = list(range(0, 2 * k, 2))
+    key = jax.random.PRNGKey(k)
+    t_s, m_s = e_s.run_subset_round(tr, sel, key)
+    t_u, m_u = e_u.run_subset_round(tr, sel, key)
+    for a, b in zip(jax.tree.leaves(t_s), jax.tree.leaves(t_u)):
+        assert float(jnp.abs(a - b).max()) < 1e-5
+    assert float(jnp.abs(m_s["loss"] - m_u["loss"]).max()) < 1e-4
+    sweep[k] = [float(x) for x in np.asarray(m_s["loss"])]
+stats = rt.stats()
+assert stats["subset_round"]["n_compiles"] == 2, \
+    ("mesh K-sweep broke the compile bound (want sharded+unsharded = "
+     "2 programs)", stats["subset_round"])
+assert runtime_lib.bucket_width(2, 16, shards=8) == \
+    runtime_lib.bucket_width(3, 16, shards=8) == 8
+print("forced-8-device sharded smoke OK:",
+      {"shards": e_s.shards,
+       "subset_round_compiles": stats["subset_round"]["n_compiles"],
+       "loss_by_k": sweep})
+EOF3
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF2'
 import numpy as np
 

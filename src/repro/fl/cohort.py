@@ -31,9 +31,13 @@ buffer-donated call**:
    sequential path (quantization blocks run along trailing dims, so the
    stacked quantization is elementwise-identical to quantizing each
    client's delta separately);
- - with a mesh, the staged cohort arrays are sharded over the
-   data-parallel axes (``launch.mesh.cohort_sharding``) and pjit splits
-   the vmapped round across devices.
+ - with a mesh, the staged cohort arrays (and the per-round cohort-axis
+   inputs) are sharded over the data-parallel axes
+   (``launch.mesh.cohort_sharding``) and pjit splits the vmapped round
+   across devices; aggregation then runs hierarchically
+   (``server.aggregate_tree``): each shard reduces its own cohort rows
+   to a partial weighted sum + partial mass, and only the small
+   (shards, ...) partials cross the mesh in the global reduce.
 
 The sequential ``Client.local_train`` path stays alive as the reference
 oracle; ``round_indices`` reproduces the engine's sample sequence so
@@ -61,8 +65,11 @@ true K rows keep the exact ``round_indices`` sample stream — indices
 are drawn outside the program at the true width), and carry zero
 aggregation weight, so padding never leaks into sampling, aggregation,
 or uplink accounting while a K-sweep compiles O(log N) programs instead
-of O(N). K=N never pads (``bucket_width(N, N) == N``), keeping the
-degenerate full-sync case bit-identical to the gather-free full round.
+of O(N). On a mesh the bucket additionally rounds up to a shard
+multiple (``bucket_width(..., shards=...)``) so the bucketed cohort
+axis always splits evenly over the data-parallel shards. K=N never pads
+(``bucket_width(N, N) == N``), keeping the degenerate full-sync case
+bit-identical to the gather-free full round.
 """
 from __future__ import annotations
 
@@ -309,7 +316,17 @@ class CohortEngine:
             put = lambda x: jax.device_put(
                 x, mesh_lib.cohort_sharding(cfg.mesh, np.ndim(x)))
         else:
+            shards = 1
             put = jnp.asarray
+        # cohort-axis shard count: subset/wave widths bucket to shard
+        # multiples (runtime.bucket_width(shards=...)) and the
+        # in-program FedAvg runs hierarchically (shard-local partial
+        # sums -> global reduce) so the full stacked delta is never
+        # reduced on one device
+        self.shards = shards
+        self._put = put
+        self._rep = mesh_lib.replicated_sharding(cfg.mesh) \
+            if cfg.mesh is not None else None
 
         # Hoist every trainable-independent prefix of the forward out of
         # the training loop — staging the pool once per engine makes this
@@ -326,8 +343,10 @@ class CohortEngine:
             frozen, ccfg, use_lora=cfg.strategy.use_lora, imgs=imgs,
             put=put, runtime=self.runtime)
         self.pool_labs = put(labs)
+        # lens stays replicated: it feeds the dedicated host-side batch
+        # index draw (sample_batch_indices), never the sharded round
         self.lens = jnp.asarray(lens, jnp.int32)
-        self.weights = jnp.asarray(weights, jnp.float32)
+        self.weights = put(weights.astype(np.float32))
         self.frozen = frozen
         self.class_emb = class_emb
         self.ccfg = ccfg
@@ -469,14 +488,27 @@ class CohortEngine:
             after, global_tr)
         return comm_quantize_stacked(delta, self.cfg.strategy), loss, acc
 
+    def _aggregate(self, global_tr, weights, delta):
+        """In-program FedAvg. Unsharded engines keep the flat
+        ``aggregate_stacked`` reduction bit-for-bit (the K=N == full
+        round identity depends on it); mesh engines aggregate
+        hierarchically — each shard reduces its own cohort rows to a
+        partial sum + partial mass and only the (shards, ...) partials
+        cross the mesh — so the stacked delta is never reduced on one
+        device. Tree == flat within fp tolerance (re-association),
+        pinned by the hypothesis property in tests/test_runtime.py."""
+        if self.shards > 1:
+            return server.aggregate_tree(global_tr, weights, delta,
+                                         n_shards=self.shards)
+        return server.aggregate_stacked(global_tr, weights, delta)
+
     def _build_round(self):
         def round_fn(global_tr, idx, pool_staged, pool_labs, weights,
                      frozen, class_emb):
             delta, loss, acc = self._train_cohort(
                 global_tr, pool_staged, pool_labs, idx, None, frozen,
                 class_emb)
-            new_global = server.aggregate_stacked(global_tr, weights,
-                                                  delta)
+            new_global = self._aggregate(global_tr, weights, delta)
             return new_global, loss, acc
 
         return round_fn
@@ -496,8 +528,7 @@ class CohortEngine:
             delta, loss, acc = self._train_cohort(
                 global_tr, staged, labs, idx, n_steps if het else None,
                 frozen, class_emb)
-            new_global = server.aggregate_stacked(global_tr, weights,
-                                                  delta)
+            new_global = self._aggregate(global_tr, weights, delta)
             return new_global, loss, acc
 
         return round_fn
@@ -519,6 +550,19 @@ class CohortEngine:
                 frozen, class_emb)
 
         return wave_fn
+
+    def _canon_global(self, global_tr):
+        """Pin the global trainables to the canonical mesh-replicated
+        placement before a sharded dispatch. A sharded round's OUTPUT
+        trainables come back replicated over the mesh, so without this
+        the warmup round (host-resident inputs) and every chained round
+        (replicated inputs) would compile separate executables under
+        the sharding-aware runtime cache keys; device_put is a no-op
+        once the placement already matches."""
+        if self._rep is None:
+            return global_tr
+        return jax.tree.map(lambda g: jax.device_put(g, self._rep),
+                            global_tr)
 
     def _donate(self):
         return (0,) if self.cfg.donate else ()
@@ -584,14 +628,19 @@ class CohortEngine:
         sel, sel_dev, n_steps, idx = self._subset_inputs(sel, key,
                                                          n_steps)
         K = len(sel)
-        B = runtime_lib.bucket_width(K, self.n_clients)
+        B = runtime_lib.bucket_width(K, self.n_clients,
+                                     shards=self.shards)
         weights = np.zeros(B, np.float32)
         weights[:K] = self.client_n[sel] / self.client_n[sel].sum()
-        weights = jnp.asarray(weights)
         server.check_weights(weights, B)
         if B > K:
             sel_dev, n_steps, idx = self._bucket_inputs(
                 sel_dev, n_steps, idx, B)
+        weights = self._put(weights)
+        if self.cfg.mesh is not None:
+            sel_dev, n_steps, idx = (self._put(sel_dev),
+                                     self._put(n_steps), self._put(idx))
+            global_tr = self._canon_global(global_tr)
         args = (global_tr, sel_dev, n_steps, idx, self.pool_staged,
                 self.pool_labs, weights, self.frozen, self.class_emb)
         new_tr, loss, acc = self.runtime.compile(
@@ -612,10 +661,15 @@ class CohortEngine:
         sel, sel_dev, n_steps, idx = self._subset_inputs(sel, key,
                                                          n_steps)
         K = len(sel)
-        B = runtime_lib.bucket_width(K, self.n_clients)
+        B = runtime_lib.bucket_width(K, self.n_clients,
+                                     shards=self.shards)
         if B > K:
             sel_dev, n_steps, idx = self._bucket_inputs(
                 sel_dev, n_steps, idx, B)
+        if self.cfg.mesh is not None:
+            sel_dev, n_steps, idx = (self._put(sel_dev),
+                                     self._put(n_steps), self._put(idx))
+            global_tr = self._canon_global(global_tr)
         args = (global_tr, sel_dev, n_steps, idx, self.pool_staged,
                 self.pool_labs, self.frozen, self.class_emb)
         delta, loss, acc = self.runtime.compile(
@@ -638,6 +692,9 @@ class CohortEngine:
                 "masked scan honors the heterogeneous step counts")
         uplink = self.uplink_bytes(global_tr)
         idx = self._sample_idx(key, self.lens, self.cfg.local_steps)
+        if self.cfg.mesh is not None:
+            idx = self._put(idx)
+            global_tr = self._canon_global(global_tr)
         args = (global_tr, idx, self.pool_staged, self.pool_labs,
                 self.weights, self.frozen, self.class_emb)
         new_tr, loss, acc = self.runtime.compile(

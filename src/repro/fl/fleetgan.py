@@ -31,6 +31,12 @@ Layout, masking, and the batch bucket:
   gradient contribution exactly. Per-step noise is pre-drawn at the TRUE
   batch shape (``gan.gan_z_stream``) and zero-padded, because threefry
   draws are not shape-stable under padding.
+- With ``FleetGANConfig.mesh`` the stacked cohort axis shards over the
+  mesh's data-parallel axes: the cohort width pads up to a shard
+  multiple with rider rows masked exactly like ineligible clients, and
+  every key/index/z draw stays host-side at the TRUE width — so
+  trained params and synthesized images are mesh-invariant (parity
+  pinned in ``tests/test_distributed.py``).
 
 RNG compatibility: client ``i`` consumes exactly the
 ``fold_in(rng, strategies.GAN_RNG_OFFSET + i)`` stream of the
@@ -57,7 +63,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +74,7 @@ from repro.core import optim
 from repro.data.synthetic import stage_client_pools
 from repro.fl import runtime as runtime_lib
 from repro.fl import strategies as strategies_lib
+from repro.launch import mesh as mesh_lib
 
 # module-level default so standalone callers (tests, benchmarks) share
 # executables across calls; the simulator threads its per-run runtime
@@ -89,9 +96,23 @@ class FleetGANConfig:
     prep: when a population is trained once and its batch-size groups
     are few, per-group programs are smaller and can compile+run faster
     than the one bucketed program padded to the cohort max.
+
+    ``mesh`` — optional Mesh: the stacked GAN cohort axis (params, both
+    Adam states, pools, pre-drawn index/noise streams, and the
+    synthesis batch) is sharded over the mesh's data-parallel axes
+    (``launch.mesh.cohort_sharding``), after padding the cohort width
+    up to a shard multiple with rows that ride exactly like ineligible
+    clients: all-False ``active`` mask (bitwise no-op steps), zero
+    index/noise fills, never written back. All RNG stays host-side at
+    the TRUE cohort width, so every key/index/z stream is bitwise the
+    unsharded (and sequential) one on any mesh. Requires
+    ``bucket_batches=True`` — the per-group exact path scatters trained
+    groups back with ``.at[]`` updates, which would force resharding
+    round-trips per group.
     """
     conv_impl: str = "gemm"
     bucket_batches: bool = True
+    mesh: Any = None
 
 
 def default_runtime() -> runtime_lib.ProgramRuntime:
@@ -287,6 +308,16 @@ def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
     if fleet_cfg is not None:
         conv_impl = fleet_cfg.conv_impl
     bucketed = fleet_cfg.bucket_batches if fleet_cfg is not None else True
+    mesh = fleet_cfg.mesh if fleet_cfg is not None else None
+    if mesh is not None and not bucketed:
+        raise ValueError(
+            "mesh-sharded fleet-GAN requires bucket_batches=True — the "
+            "per-group exact path scatters trained groups back with "
+            ".at[] row updates, which would reshard per group")
+    shards = mesh_lib.cohort_axis_size(mesh) if mesh is not None else 1
+    put = (lambda x: jax.device_put(
+        x, mesh_lib.cohort_sharding(mesh, jnp.ndim(x)))) \
+        if mesh is not None else (lambda x: x)
     rt = runtime if runtime is not None else _DEFAULT_RUNTIME
     rep = FleetGANReport(n_clients=len(clients), n_eligible=0)
     job = FleetGANJob(report=rep, need={}, _clients=clients, _runtime=rt,
@@ -334,11 +365,29 @@ def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
     pool_i, pool_l, lens = stage_client_pools(
         [(c.images, c.labels) for c in clients])
 
+    # mesh: pad the stacked cohort width up to a shard multiple. Pad
+    # rows ride exactly like ineligible clients — all-False active
+    # mask, zero index/noise fills, never written back — and duplicate
+    # client 0's keys (already drawn at the TRUE width above; threefry
+    # is not shape-stable, so every key/index/z draw happens before
+    # this pad and is bitwise the unsharded stream on any mesh).
+    Cp = runtime_lib.shard_multiple(C, shards)
+    if Cp > C:
+        tile = lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (Cp - C,) + a.shape[1:])])
+        k0s, kbs, kss = tile(k0s), tile(kbs), tile(kss)
+        pool_i = np.concatenate([pool_i, np.zeros(
+            (Cp - C, *np.shape(pool_i)[1:]), np.asarray(pool_i).dtype)])
+        pool_l = np.concatenate([pool_l, np.zeros(
+            (Cp - C, *np.shape(pool_l)[1:]), np.asarray(pool_l).dtype)])
+        n_b = np.concatenate([n_b, np.full(Cp - C, B, np.int32)])
+
     by_batch: Dict[int, List[int]] = {}
     for i in range(C):
         if eligible[i]:
             by_batch.setdefault(int(n_b[i]), []).append(i)
 
+    k0s = put(k0s)
     params, opt = rt.compile("gan_init", lambda: _init_build(cfg),
                              (k0s,), static_key=(cfg,))(k0s)
 
@@ -364,7 +413,9 @@ def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
             parts_z.append(jnp.pad(z_g, bpad + ((0, 0),)))
             parts_z2.append(jnp.pad(z2_g, bpad + ((0, 0),)))
             order.extend(pos)
-        inelig = [i for i in range(C) if not eligible[i]]
+        # mesh pad rows (positions C..Cp) join the ineligible riders:
+        # zero draws, all-False active, masked bitwise no-op steps
+        inelig = [i for i in range(Cp) if i >= C or not eligible[i]]
         if inelig:
             parts_idx.append(
                 jnp.zeros((len(inelig), steps, B), jnp.int32))
@@ -379,9 +430,12 @@ def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
         z2_all = jnp.concatenate(parts_z2)[perm]
 
         active = jnp.asarray(np.repeat(
-            [[bool(e)] for e in eligible], steps, axis=1))
+            [[bool(e)] for e in eligible] + [[False]] * (Cp - C),
+            steps, axis=1))
         targs = (params, opt, jnp.asarray(pool_i), jnp.asarray(pool_l),
                  idx_all, z_all, z2_all, jnp.asarray(n_b), active)
+        if mesh is not None:
+            targs = tuple(jax.tree.map(put, t) for t in targs)
         params, opt, ms = rt.compile(
             "gan_train", lambda: _train_build(cfg), targs,
             static_key=(cfg,), donate_argnums=(0, 1))(*targs)
@@ -436,9 +490,24 @@ def launch_gan_fleet(clients: Sequence, keys: Sequence, *, steps: int,
             for _, _, z in synth])
         lab_pad = jnp.asarray(np.stack([
             np.pad(nd, (0, M - len(nd))) for _, nd, _ in synth]))
-        rows = jnp.asarray([i for i, _, _ in synth])
+        row_src = [i for i, _, _ in synth]
+        # mesh: pad the synthesis cohort axis to a shard multiple at
+        # the END (true rows keep their positions for resolve()); pad
+        # rows generate from client 0's trained params on zero z/labels
+        # and are never delivered
+        Sp = runtime_lib.shard_multiple(len(synth), shards)
+        if Sp > len(synth):
+            extra = Sp - len(synth)
+            z_pad = jnp.concatenate(
+                [z_pad, jnp.zeros((extra, M, cfg.z_dim))])
+            lab_pad = jnp.concatenate(
+                [lab_pad, jnp.zeros((extra, M), lab_pad.dtype)])
+            row_src = row_src + [row_src[0]] * extra
+        rows = jnp.asarray(row_src)
         gens = jax.tree.map(lambda l: l[rows], params["gen"])
         sargs = (gens, z_pad, lab_pad)
+        if mesh is not None:
+            sargs = tuple(jax.tree.map(put, t) for t in sargs)
         job._synth_handle = rt.dispatch(
             "gan_synth", lambda: _synth_build(cfg), sargs,
             static_key=(cfg,))

@@ -9,7 +9,8 @@ things the engines used to re-implement ad hoc:
 **AOT compilation + accounting.** Programs are compiled ahead of time
 (``jax.jit(fn, donate_argnums=...).lower(*args).compile()``) and the
 resulting executables are cached by ``(kind, static config, donation
-signature, argument shapes/dtypes)`` and then *called directly*, so the
+signature, argument shapes/dtypes/shardings)`` and then *called
+directly*, so the
 executable cache is the execution path (no separate jit call-path cache
 to re-warm). Wall-clock spent compiling is charged per ``kind`` on cache
 misses only; ``stats()``/``n_compiles``/``compile_time_s`` give the
@@ -73,18 +74,43 @@ def pow2_ceil(n: int) -> int:
     return 1 << (int(n) - 1).bit_length()
 
 
-def bucket_width(k: int, n: int, *, min_bucket: int = MIN_COHORT_BUCKET
-                 ) -> int:
+def shard_multiple(n: int, shards: int) -> int:
+    """Smallest multiple of ``shards`` >= n."""
+    if shards < 1:
+        raise ValueError(f"shard_multiple needs shards >= 1, got {shards}")
+    return -(-int(n) // int(shards)) * int(shards)
+
+
+def bucket_width(k: int, n: int, *, min_bucket: int = MIN_COHORT_BUCKET,
+                 shards: int = 1) -> int:
     """Cohort-axis bucket for a selection of ``k`` out of ``n`` clients:
     the next power of two (floored at ``min_bucket``), clamped to ``n``.
     ``k == n`` always maps to ``n`` itself, so full-cohort selections
     never pad — the K=N subset round stays bit-identical to the
-    gather-free full round."""
+    gather-free full round.
+
+    ``shards`` composes the bucket with mesh sharding of the cohort
+    axis: the width rounds up to a shard multiple (still clamped to
+    ``n``) so every data-parallel shard holds the same number of rows.
+    The extra rows follow the existing pad contract — they gather a
+    valid client's staged pool but carry zero aggregation weight and
+    exactly-zero gradient/partial-sum contribution — so a sharded
+    selection never needs its own padding rule. A mesh-sharded
+    population must already satisfy ``n % shards == 0`` (the cohort
+    engine enforces it), which keeps the K=N clamp a shard multiple
+    too."""
     if not 1 <= k <= n:
         raise ValueError(f"selection width {k} out of range for {n}")
+    if shards > 1 and n % shards:
+        raise ValueError(
+            f"population {n} not divisible by {shards} mesh shards — "
+            "the staged cohort axis cannot shard evenly")
     if k >= n:
         return n
-    return min(n, max(min_bucket, pow2_ceil(k)))
+    b = min(n, max(min_bucket, pow2_ceil(k)))
+    if shards > 1:
+        b = min(n, shard_multiple(b, shards))
+    return b
 
 
 def bucket_rows(n: int, cap: int) -> int:
@@ -153,10 +179,38 @@ class ProgramRuntime:
 
     # -- cache ---------------------------------------------------------
     @staticmethod
-    def _sig(args) -> Tuple:
+    def _shard_sig(leaf) -> Tuple:
+        """Sharding identity of one argument leaf. AOT executables bake
+        their input shardings in at ``lower()`` time, so a sharded and
+        an unsharded program over identical shapes are *different
+        programs* and must never collide in the cache. Plain host
+        arrays and single-device placements (the overwhelmingly common
+        case) all map to ``()`` so the pre-mesh cache behavior — and
+        its compile counts — are unchanged; only genuinely
+        mesh-partitioned inputs (NamedSharding, or anything spanning
+        more than one device) contribute a key."""
+        s = getattr(leaf, "sharding", None)
+        if s is None:
+            return ()
+        try:
+            from jax.sharding import NamedSharding
+            if isinstance(s, NamedSharding):
+                mesh = s.mesh
+                return (tuple(mesh.axis_names),
+                        tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+                        str(s.spec))
+            if len(s.device_set) > 1:
+                return (str(s),)
+        except Exception:
+            return ()
+        return ()
+
+    @classmethod
+    def _sig(cls, args) -> Tuple:
         return tuple(
             (tuple(getattr(l, "shape", ())),
-             str(getattr(l, "dtype", type(l).__name__)))
+             str(getattr(l, "dtype", type(l).__name__)),
+             cls._shard_sig(l))
             for l in jax.tree.leaves(args))
 
     def compile(self, kind: str, build: Callable[[], Callable], args,

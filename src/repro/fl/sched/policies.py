@@ -122,9 +122,17 @@ class CohortExec:
         return slices, m
 
     def commit_buffer(self, global_tr, weights, deltas):
+        stacked = stack_client_deltas(deltas)
+        if getattr(self.engine, "shards", 1) > 1:
+            # mesh-sharded engine: commit hierarchically so the host
+            # buffer (whose size need not divide the shard count —
+            # aggregate_tree zero-pads internally) never reduces flat on
+            # one device
+            return server.aggregate_tree(
+                global_tr, jnp.asarray(weights, jnp.float32), stacked,
+                n_shards=self.engine.shards)
         return server.aggregate_stacked(
-            global_tr, jnp.asarray(weights, jnp.float32),
-            stack_client_deltas(deltas))
+            global_tr, jnp.asarray(weights, jnp.float32), stacked)
 
     def client_masses(self) -> np.ndarray:
         """Per-client sample counts over the full population (the m_i of

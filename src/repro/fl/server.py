@@ -141,6 +141,82 @@ def aggregate_stacked(global_trainable, weights, stacked_delta):
         g.dtype), global_trainable, agg)
 
 
+def tree_partials(masses, stacked_delta, *, n_shards: int):
+    """Shard-local stage of hierarchical FedAvg: split the stacked
+    cohort axis into ``n_shards`` contiguous groups and reduce each
+    group to a **partial weighted delta sum** plus its **partial weight
+    mass** — the pair a shard uploads instead of its clients' stacked
+    deltas. ``masses`` are non-negative importance masses (sample
+    counts, or any already-discounted weighting; they need not sum
+    to 1 — the global stage normalizes by the total mass).
+
+    If the cohort width is not a shard multiple, the tail pads with
+    zero-mass, zero-delta rows — exact, because a zero mass contributes
+    ``0 * x == 0`` to its shard's partial sum and ``0`` to its mass.
+    On a mesh-sharded cohort axis the reshape keeps every group's rows
+    local to its shard, so the per-shard ``einsum`` never moves a
+    stacked delta off-device; only the (n_shards, ...) partials cross
+    shards in the global reduce.
+
+    Returns ``(partials, mass_s)``: a delta-shaped tree whose leaves
+    carry a leading ``(n_shards,)`` axis, and the (n_shards,) partial
+    masses."""
+    if n_shards < 1:
+        raise ValueError(f"tree_partials needs n_shards >= 1, got "
+                         f"{n_shards}")
+    leaves = jax.tree.leaves(stacked_delta,
+                             is_leaf=lambda l: isinstance(l, QTensor))
+    n = leaves[0].shape[0] if leaves else 0
+    for l in leaves:
+        if l.shape[0] != n:
+            raise ValueError("stacked delta leaves disagree on the "
+                             f"cohort axis: {l.shape[0]} vs {n}")
+    if np.shape(masses) != (n,):
+        raise ValueError(
+            f"masses shape {np.shape(masses)} != ({n},) — one mass per "
+            "stacked update")
+    if not isinstance(masses, jax.core.Tracer):
+        m = np.asarray(masses, np.float64)
+        if not np.all(np.isfinite(m)) or np.any(m < 0):
+            raise ValueError(
+                f"masses must be finite and >= 0, got {m}")
+    pad = -(-n // n_shards) * n_shards - n
+    m_r = jnp.pad(jnp.asarray(masses, jnp.float32), (0, pad)) \
+        .reshape(n_shards, -1)
+    mass_s = m_r.sum(axis=1)
+
+    def leaf(d):
+        x = dequantize(d, jnp.float32) if isinstance(d, QTensor) else \
+            d.astype(jnp.float32)
+        if pad:
+            x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        x = x.reshape(n_shards, -1, *x.shape[1:])
+        return jnp.einsum("sb,sb...->s...", m_r, x)
+
+    partials = jax.tree.map(leaf, stacked_delta,
+                            is_leaf=lambda l: isinstance(l, QTensor))
+    return partials, mass_s
+
+
+def aggregate_tree(global_trainable, masses, stacked_delta, *,
+                   n_shards: int):
+    """Hierarchical (two-level) FedAvg: clients → shard-local partial
+    sums (:func:`tree_partials`) → global reduce of the ``n_shards``
+    partials, normalized by the total mass. Mathematically a
+    re-association of :func:`aggregate_stacked` — the flat aggregator
+    stays as the parity oracle (tree == flat within fp tolerance,
+    pinned by the hypothesis property in ``tests/test_runtime.py``) —
+    but on a mesh the full stacked delta is never reduced on one
+    device: each shard reduces its own rows and only the small
+    (n_shards, ...) partials cross the mesh."""
+    partials, mass_s = tree_partials(masses, stacked_delta,
+                                     n_shards=n_shards)
+    total = mass_s.sum()
+    agg = jax.tree.map(lambda p: p.sum(axis=0) / total, partials)
+    return jax.tree.map(lambda g, a: (g.astype(jnp.float32) + a).astype(
+        g.dtype), global_trainable, agg)
+
+
 def secure_sum_bytes(updates) -> int:
     """Total uplink payload this round (comm-cost bookkeeping)."""
     from repro.core.quant import tree_bytes

@@ -47,6 +47,28 @@ def make_debug_mesh(shape=(1, 2, 2), axes=("pod", "data", "model")):
         return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
+def make_data_mesh(n_shards: int = 0):
+    """Data-parallel-only mesh ``(data=n_shards,)`` over the host's
+    devices — the mesh the cohort/fleet-GAN engines shard their stacked
+    cohort axis over when there is no model parallelism in play
+    (mesh-scale benchmarks, forced-8-device CI smokes). ``n_shards=0``
+    takes every visible device."""
+    devices = jax.devices()
+    n = n_shards or len(devices)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for a (data={n}) mesh; have "
+            f"{len(devices)}. Set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before importing jax.")
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh((n,), ("data",), (AxisType.Auto,),
+                             devices=devices[:n])
+    except (ImportError, TypeError):
+        return jax.make_mesh((n,), ("data",), devices=devices[:n])
+
+
 def dp_axes(mesh) -> tuple:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 
@@ -61,6 +83,17 @@ def cohort_sharding(mesh, ndim: int):
     dp = dp_axes(mesh)
     return NamedSharding(
         mesh, PartitionSpec(dp if dp else None, *([None] * (ndim - 1))))
+
+
+def replicated_sharding(mesh):
+    """Fully-replicated NamedSharding on ``mesh``. The cohort engine
+    device_puts the global trainables with this before a sharded round:
+    a round's OUTPUT trainables come back mesh-replicated, so without
+    canonicalizing the first (host-resident) input the sharding-aware
+    runtime cache would compile the same round twice — once for the
+    host placement, once for the steady-state chained placement."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec())
 
 
 def cohort_axis_size(mesh) -> int:

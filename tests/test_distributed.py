@@ -140,6 +140,168 @@ assert np.isfinite(float(m["loss"]))
 """)
 
 
+# shared cohort fixture for the FL mesh-parity tests: 8 clients (the
+# debug mesh's 4 dp shards divide it), heterogeneous step multipliers so
+# the masked-scan path rides along
+FL_COHORT = """
+from repro.core import clip as clip_lib
+from repro.data.synthetic import class_tokens, make_dataset
+from repro.fl import client as client_lib, cohort as cohort_lib, partition
+from repro.fl.strategies import STRATEGIES
+strat = STRATEGIES["fedclip"]
+ccfg = clip_lib.CLIPConfig()
+frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+data = make_dataset("pacs", n_per_class=16, seed=0, longtail_gamma=2.0)
+spec = data["spec"]
+class_emb = clip_lib.text_embedding(
+    frozen, ccfg, jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+parts = partition.dirichlet_partition(data["labels"], 8, 1.0, seed=0)
+mult = [2, 1, 1, 1, 2, 1, 1, 1]
+clients = [client_lib.Client(
+    cid=i, images=data["images"][idx], labels=data["labels"][idx],
+    n_classes=spec.n_classes, strategy=strat, step_mult=mult[i])
+    for i, idx in enumerate(parts)]
+tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg, strat)
+def mk_engine(mesh_arg):
+    return cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(strategy=strat, local_steps=2,
+                                    batch_size=8, lr=3e-3,
+                                    mesh=mesh_arg, donate=False))
+"""
+
+
+def test_subset_round_distributed_matches_local():
+    """Sync-partial subset rounds (K < N, heterogeneous step counts,
+    bucket padding in play) on the sharded engine must match the
+    unsharded engine: K=2 buckets to the 4-shard multiple 4, K=5
+    buckets to 8 — both exercise shard-pad rows AND the hierarchical
+    (tree) aggregation against the flat single-device path."""
+    _run(FL_COHORT + """
+e0, e1 = mk_engine(None), mk_engine(mesh)
+assert e0.shards == 1 and e1.shards == 4
+# the staged cohort axis really splits 4 ways (each shard is then
+# replicated over the debug mesh's model axis, so it spans all 8
+# devices — per-shard shape, not device count, is the guard)
+shard_rows = e1.pool_staged.sharding.shard_shape(
+    e1.pool_staged.shape)[0]
+assert shard_rows * 4 == e1.pool_staged.shape[0], \
+    (shard_rows, e1.pool_staged.shape)
+from repro.fl import runtime as runtime_lib
+assert runtime_lib.bucket_width(2, 8, shards=4) == 4
+for sel in ([1, 4], [0, 2, 4, 6, 7]):
+    key = jax.random.PRNGKey(10 + len(sel))
+    t0, m0 = e0.run_subset_round(tr, sel, key)
+    t1, m1 = e1.run_subset_round(tr, sel, key)
+    for a, b in zip(jax.tree.leaves(t0), jax.tree.leaves(t1)):
+        assert float(jnp.abs(a - b).max()) < 1e-5
+    assert float(jnp.abs(m0["loss"] - m1["loss"]).max()) < 1e-4
+    assert m0["uplink_bytes"] == m1["uplink_bytes"]
+    assert list(m0["sel"]) == list(m1["sel"])
+""")
+
+
+def test_fleetgan_distributed_matches_local():
+    """Fleet-GAN training + synthesis on a data mesh (cohort width 5
+    pads to the 8-shard multiple 8, one ineligible rider) must match
+    the unsharded fleet: trained params within the gemm-reassociation
+    tolerance, synthesized rebalancing sets near-bitwise, labels
+    bitwise."""
+    _run("""
+from repro.fl import client as client_lib, fleetgan
+from repro.fl import runtime as runtime_lib
+from repro.fl import strategies as strategies_lib
+from repro.fl.strategies import STRATEGIES
+from repro.launch.mesh import make_data_mesh
+strat = STRATEGIES["tripleplay"]
+def mk():
+    rs = np.random.RandomState(0)
+    cl = []
+    for i, n in enumerate((40, 21, 12, 9, 5)):
+        cl.append(client_lib.Client(
+            cid=i, images=rs.rand(n, 32, 32, 3).astype(np.float32),
+            labels=(np.arange(n) % 3).astype(np.int32), n_classes=7,
+            strategy=strat))
+    return cl
+keys = [jax.random.fold_in(jax.random.PRNGKey(0),
+                           strategies_lib.GAN_RNG_OFFSET + i)
+        for i in range(5)]
+cl0, cl1 = mk(), mk()
+rep0 = fleetgan.prepare_gan_fleet(
+    cl0, keys, steps=4, runtime=runtime_lib.ProgramRuntime())
+rep1 = fleetgan.prepare_gan_fleet(
+    cl1, keys, steps=4,
+    fleet_cfg=fleetgan.FleetGANConfig(mesh=make_data_mesh(8)),
+    runtime=runtime_lib.ProgramRuntime())
+assert rep0.n_eligible == rep1.n_eligible == 4
+assert rep0.n_synth == rep1.n_synth > 0
+assert rep0.groups == rep1.groups        # true cohort width, not padded
+for a, b in zip(cl0, cl1):
+    if a.gan_params is None:
+        assert b.gan_params is None      # the rider stays untouched
+        continue
+    for la, lb in zip(jax.tree.leaves(a.gan_params),
+                      jax.tree.leaves(b.gan_params)):
+        assert float(jnp.abs(la - lb).max()) < 2e-3
+    np.testing.assert_array_equal(a.aug_labels, b.aug_labels)
+    assert float(np.abs(a.aug_images - b.aug_images).max()) < 5e-3
+""")
+
+
+RNG_DIGEST = """
+import hashlib
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import gan as gan_lib
+from repro.fl import cohort as cohort_lib
+from repro.fl.sched.policies import SyncPartialScheduler
+from repro.fl.sched.traces import resolve_trace
+h = hashlib.sha256()
+sched = SyncPartialScheduler(
+    executor=object(), trace=resolve_trace("skewed-het", 16, seed=0),
+    local_steps=2, clients_per_round=5)
+c = sched.select(0, jax.random.PRNGKey(5))
+h.update(np.asarray(c.sel).tobytes())
+h.update(np.asarray(c.n_steps).tobytes())
+idx = cohort_lib.round_indices(
+    jax.random.PRNGKey(6), jnp.asarray([7, 9, 13, 21, 5], jnp.int32),
+    4, 8)
+h.update(np.asarray(idx).tobytes())
+k0, kbs, kss = jax.jit(
+    lambda r: gan_lib.gan_key_stream(r, 6))(jax.random.PRNGKey(7))
+for a in (k0, kbs, kss):
+    h.update(np.asarray(a).tobytes())
+h.update(np.asarray(gan_lib.gan_batch_indices(
+    kbs, jnp.asarray(17), 8)).tobytes())
+z, z2 = gan_lib.gan_z_stream(kss, 8, 16)
+h.update(np.asarray(z).tobytes())
+h.update(np.asarray(z2).tobytes())
+print(len(jax.devices()), h.hexdigest())
+"""
+
+
+def test_rng_streams_mesh_invariant():
+    """Client selection, batch-index streams, and GAN key/z streams are
+    drawn host-side on replicated inputs — so they must be BITWISE
+    identical whether the process sees 1, 2, 4, or 8 devices. This pins
+    the RNG discipline ('threefry is neither mesh- nor shape-stable, so
+    no draw may live inside a sharded program') with a direct
+    multi-device regression."""
+    digests = {}
+    for n_dev in (1, 2, 4, 8):
+        env = dict(ENV, XLA_FLAGS=(
+            f"--xla_force_host_platform_device_count={n_dev}"))
+        proc = subprocess.run(
+            [sys.executable, "-c", RNG_DIGEST], env=env,
+            capture_output=True, text=True, timeout=600,
+            cwd=os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))))
+        assert proc.returncode == 0, proc.stderr[-3000:]
+        n, digest = proc.stdout.split()
+        assert int(n) == n_dev      # the flag actually took effect
+        digests[n_dev] = digest
+    assert len(set(digests.values())) == 1, digests
+
+
 def test_decode_step_distributed_matches_local():
     _run("""
 from repro.configs import get_reduced

@@ -76,6 +76,31 @@ def test_runtime_cache_and_accounting():
     assert rt.n_compiles == 0 and rt.stats() == {}
 
 
+def test_shard_multiple_and_sharded_bucket_width():
+    """On a mesh the width bucket additionally rounds up to a shard
+    multiple (clamped to N) so the bucketed cohort axis always splits
+    evenly over the data-parallel shards; K=N still never pads."""
+    assert runtime_lib.shard_multiple(5, 1) == 5
+    assert runtime_lib.shard_multiple(5, 4) == 8
+    assert runtime_lib.shard_multiple(8, 4) == 8
+    assert runtime_lib.shard_multiple(9, 8) == 16
+    with pytest.raises(ValueError):
+        runtime_lib.shard_multiple(5, 0)
+    # shards=1 is exactly the unsharded arithmetic
+    for k, n in ((2, 16), (5, 16), (9, 16), (3, 3)):
+        assert runtime_lib.bucket_width(k, n, shards=1) == \
+            runtime_lib.bucket_width(k, n)
+    assert runtime_lib.bucket_width(2, 16, shards=8) == 8
+    assert runtime_lib.bucket_width(5, 16, shards=8) == 8
+    assert runtime_lib.bucket_width(9, 16, shards=8) == 16
+    assert runtime_lib.bucket_width(5, 12, shards=4) == 8
+    assert runtime_lib.bucket_width(11, 12, shards=4) == 12  # clamp to N
+    for n in (8, 12, 16):          # K=N never pads, sharded or not
+        assert runtime_lib.bucket_width(n, n, shards=4) == n
+    with pytest.raises(ValueError):  # population must shard evenly
+        runtime_lib.bucket_width(2, 10, shards=4)
+
+
 # -- compile-count regression: cohort width buckets --------------------
 
 def _mk_engine(runtime, sizes, arm="fedclip"):
@@ -235,6 +260,116 @@ def test_mean_corrected_padded_step_matches_unpadded(n, pad, seed):
             np.testing.assert_allclose(
                 a, b, atol=1e-5, rtol=0,
                 err_msg=jax.tree_util.keystr(path))
+
+
+# -- hierarchical aggregation == flat aggregation (hypothesis) ----------
+
+def _random_stacked_delta(rs, n):
+    """A stacked delta tree with a quantized leaf next to plain floats —
+    the layout ``comm_quantize_stacked`` hands ``aggregate_stacked``."""
+    from repro.core import quant
+    return {
+        "adapter": jnp.asarray(rs.randn(n, 6, 3).astype(np.float32)),
+        "bias": jnp.asarray(rs.randn(n, 5).astype(np.float32)),
+        "lora": quant.quantize(
+            jnp.asarray(rs.randn(n, 8, 8).astype(np.float32)),
+            bits=8, block=4, mode="linear"),
+    }
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 8), st.integers(0, 10 ** 6))
+def test_tree_aggregation_matches_flat(n, n_shards, seed):
+    """server.aggregate_tree is a re-association of aggregate_stacked:
+    for arbitrary client masses (zero masses included) and arbitrary
+    shard splits — even ones the cohort width does not divide — the two
+    must agree within fp tolerance. This is the parity oracle that lets
+    the mesh engines aggregate hierarchically."""
+    from repro.fl import server
+    rs = np.random.RandomState(seed)
+    delta = _random_stacked_delta(rs, n)
+    masses = rs.rand(n).astype(np.float32) * 10
+    masses[rs.rand(n) < 0.25] = 0.0          # dropped/zero-weight rows
+    if masses.sum() == 0:
+        masses[0] = 1.0
+    weights = jnp.asarray(masses / masses.sum())
+    gt = {"adapter": jnp.asarray(rs.randn(6, 3).astype(np.float32)),
+          "bias": jnp.asarray(rs.randn(5).astype(np.float32)),
+          "lora": jnp.asarray(rs.randn(8, 8).astype(np.float32))}
+    flat = server.aggregate_stacked(gt, weights, delta)
+    # tree path takes UNnormalized masses (it normalizes by the total)
+    tree = server.aggregate_tree(gt, jnp.asarray(masses), delta,
+                                 n_shards=n_shards)
+    for (path, a), b in zip(
+            jax.tree_util.tree_leaves_with_path(flat),
+            jax.tree.leaves(tree)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5,
+            err_msg=jax.tree_util.keystr(path))
+
+
+def test_tree_partials_pad_rows_are_exact_zero():
+    """Shard-padding rows (cohort width not a shard multiple) must
+    contribute EXACTLY zero partial sum and zero partial mass — not
+    fp-tolerance zero — and zero-mass true rows must zero their own
+    contribution exactly too."""
+    from repro.fl import server
+    rs = np.random.RandomState(0)
+    n, n_shards = 5, 4               # pads to 8: shard 3+ is half pad
+    delta = _random_stacked_delta(rs, n)
+    masses = np.asarray([2.0, 1.0, 0.0, 3.0, 1.5], np.float32)
+    partials, mass_s = server.tree_partials(
+        jnp.asarray(masses), delta, n_shards=n_shards)
+    assert mass_s.shape == (n_shards,)
+    # rows 0..4 split into groups of 2: [0,1],[2,3],[4,pad],[pad,pad]
+    np.testing.assert_array_equal(
+        np.asarray(mass_s), [3.0, 3.0, 1.5, 0.0])
+    # the all-pad shard's partial sums are bitwise zero on every leaf
+    for leaf in jax.tree.leaves(partials):
+        assert np.all(np.asarray(leaf)[-1] == 0.0)
+    # zero-mass client 2 contributes exactly zero: shard 1's partial is
+    # bitwise 3.0 * client 3's delta
+    from repro.core.quant import dequantize, QTensor
+    for leaf, part in zip(
+            jax.tree.leaves(delta,
+                            is_leaf=lambda l: isinstance(l, QTensor)),
+            jax.tree.leaves(partials)):
+        dq = dequantize(leaf, jnp.float32) if isinstance(leaf, QTensor) \
+            else np.asarray(leaf, np.float32)
+        np.testing.assert_array_equal(np.asarray(part)[1],
+                                      3.0 * np.asarray(dq)[3])
+    with pytest.raises(ValueError):
+        server.tree_partials(jnp.asarray(masses), delta, n_shards=0)
+    with pytest.raises(ValueError):   # mass per stacked row, not fewer
+        server.tree_partials(jnp.asarray(masses[:3]), delta, n_shards=2)
+
+
+# -- cache keys carry sharding identity ---------------------------------
+
+def test_runtime_cache_separates_shardings():
+    """A sharded and an unsharded program with identical shapes/dtypes
+    must not share an executable: AOT-compiled programs bake their input
+    shardings in at lower() time, so a collision would hand back an
+    executable compiled for the wrong placement. A 1-device mesh
+    suffices — NamedSharding identity is part of the signature."""
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_data_mesh(1)
+    rt = runtime_lib.ProgramRuntime()
+    build = lambda: (lambda x: x * 2.0)
+    a = jnp.ones((8, 4))
+    a_sharded = jax.device_put(a, mesh_lib.cohort_sharding(mesh, 2))
+    rt.run("double", build, (a,))
+    rt.run("double", build, (a_sharded,))     # same shape, new sharding
+    assert rt.stats()["double"]["n_compiles"] == 2, rt.stats()
+    # both placements hit their own entry on re-dispatch
+    rt.run("double", build, (jnp.zeros((8, 4)),))
+    rt.run("double", build, (jax.device_put(
+        jnp.zeros((8, 4)), mesh_lib.cohort_sharding(mesh, 2)),))
+    assert rt.stats()["double"]["n_compiles"] == 2
+    # a different mesh axis layout is a different signature too
+    sig_plain = runtime_lib.ProgramRuntime._sig((a,))
+    sig_shard = runtime_lib.ProgramRuntime._sig((a_sharded,))
+    assert sig_plain != sig_shard
 
 
 # -- every fused program reports through one ledger ---------------------
