@@ -219,6 +219,110 @@ def time_gan_fleet(n_clients: int) -> fleetgan.FleetGANReport:
         clients, _gan_keys(len(clients)), steps=GAN_STEPS)
 
 
+def _time_cohort_best(strat, frozen, tr, class_emb, ccfg, clients,
+                      reps=3):
+    """``time_cohort`` with min-over-repeats steady state: the fused-
+    vs-chain LoRA delta is a few percent of a full training round, so
+    one-shot means on this container drown it in scheduler noise."""
+    engine = cohort_lib.CohortEngine(
+        frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+        cfg=cohort_lib.CohortConfig(strategy=strat,
+                                    local_steps=LOCAL_STEPS,
+                                    batch_size=BATCH, lr=LR))
+    key = jax.random.PRNGKey(0)
+    tr = jax.tree.map(jnp.copy, tr)
+    tr, _ = engine.run_round(tr, jax.random.fold_in(key, 999))  # warmup
+    jax.block_until_ready(tr)
+    best = float("inf")
+    for rep in range(reps):
+        t0 = time.perf_counter()
+        for rnd in range(ROUNDS):
+            tr, _ = engine.run_round(
+                tr, jax.random.fold_in(key, rep * ROUNDS + rnd))
+        jax.block_until_ready(tr)
+        best = min(best, (time.perf_counter() - t0) / ROUNDS)
+    rt = engine.runtime
+    return best, {"n_compiles": rt.n_compiles,
+                  "compile_time_s": rt.compile_time_s}
+
+
+def qlora_fused_points():
+    """Fused-LoRA vs einsum-chain cohort rounds on the qlora arm.
+
+    ``REPRO_LORA_FUSED`` toggles the routing inside ``core.lora.linear``
+    at trace time; the cohort static key includes it, so the two
+    engines compile apart instead of sharing stale executables. The
+    kernel-trace counters assert each engine actually took its path —
+    a silent fallback here would time the same program twice and
+    report a fake 1.0x."""
+    from repro.kernels import ops as kops
+    saved = os.environ.get("REPRO_LORA_FUSED")
+    pts = []
+    try:
+        for n in N_CLIENTS:
+            strat, ccfg, frozen, class_emb, clients, tr, _ = _setup(
+                "qlora_nogan", n)
+            times = {}
+            for impl, env in (("fused", "1"), ("chain", "0")):
+                os.environ["REPRO_LORA_FUSED"] = env
+                kops.reset_kernel_traces()
+                coh, stats = _time_cohort_best(strat, frozen, tr,
+                                               class_emb, ccfg, clients)
+                took = f"lora_linear_{impl}"
+                other = ("lora_linear_chain" if impl == "fused"
+                         else "lora_linear_fused")
+                assert kops.KERNEL_TRACES.get(took, 0) > 0 and \
+                    kops.KERNEL_TRACES.get(other, 0) == 0, \
+                    (impl, dict(kops.KERNEL_TRACES))
+                times[impl] = (coh, stats)
+            point = {"strategy": "qlora_nogan", "n_clients": n,
+                     "n_clients_effective": len(clients),
+                     "cohort_round_s_fused": times["fused"][0],
+                     "cohort_round_s_chain": times["chain"][0],
+                     "lora_fused_speedup":
+                         times["chain"][0] / times["fused"][0],
+                     "n_compiles_fused": times["fused"][1]["n_compiles"],
+                     "n_compiles_chain": times["chain"][1]["n_compiles"]}
+            pts.append(point)
+            print(f"qlora-fused  n_clients={n:3d}  "
+                  f"fused={times['fused'][0]*1e3:7.1f} ms  "
+                  f"chain={times['chain'][0]*1e3:7.1f} ms  "
+                  f"speedup={point['lora_fused_speedup']:.2f}x")
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_LORA_FUSED", None)
+        else:
+            os.environ["REPRO_LORA_FUSED"] = saved
+    return pts
+
+
+def _merge_qlora_points(results: dict, pts: list) -> None:
+    """Attach the fused/chain timings to the matching qlora cohort rows
+    and keep the dedicated section."""
+    results["qlora_fused_points"] = pts
+    for p in results.get("points", []):
+        if p.get("strategy") != "qlora_nogan":
+            continue
+        for q in pts:
+            if q["n_clients"] == p["n_clients"]:
+                p["cohort_round_s_fused"] = q["cohort_round_s_fused"]
+                p["cohort_round_s_chain"] = q["cohort_round_s_chain"]
+                p["lora_fused_speedup"] = q["lora_fused_speedup"]
+
+
+def qlora_only_main():
+    """Re-run just the qlora fused-vs-chain points and merge them into
+    the existing ``BENCH_fl_round.json`` (the full bench keeps its
+    mesh/chaos/GAN sections from the last complete run)."""
+    out = ROOT / "BENCH_fl_round.json"
+    results = (json.load(open(out)) if out.exists()
+               else {"config": {}, "points": []})
+    _merge_qlora_points(results, qlora_fused_points())
+    with open(out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {out}")
+
+
 MESH_DEVICES = 8
 MESH_N_CLIENTS = 1024
 MESH_K = 64
@@ -468,6 +572,8 @@ def main():
               f" ms  vtime={point['vtime_final']:7.1f}  "
               f"tail_acc={point['tail_acc_final']:.3f}  "
               f"faults={sum(point['fault_ledger'].values())}")
+    # fused-LoRA vs einsum-chain cohort timings on the qlora arm
+    _merge_qlora_points(results, qlora_fused_points())
     # mesh-scale points (forced-8-device child interpreter)
     results["mesh_points"] = _run_mesh_points()
     sp, fg = (results["mesh_points"]["sync_partial_1024"],
@@ -487,5 +593,7 @@ def main():
 if __name__ == "__main__":
     if "--mesh-child" in sys.argv:
         _mesh_child()
+    elif "--qlora-only" in sys.argv:
+        qlora_only_main()
     else:
         main()

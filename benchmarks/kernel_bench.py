@@ -15,7 +15,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import quant as qlib
+from repro.kernels import ops as kops
 from repro.kernels import ref
+from repro.kernels.quant_matmul import quant_matmul as qmm_pallas
 
 
 def _time(fn, *args, iters=5):
@@ -50,6 +52,76 @@ def run() -> list[str]:
         rows.append(f"kernel/qmm_ref/{mode}{bits},{t*1e6:.0f},"
                     f"dense_us={dense_t*1e6:.0f};"
                     f"bytes_saved={1 - (qt.nbytes_packed() / w.nbytes):.2f}")
+    # quant matmul Pallas path (interpret mode — regression tracking for
+    # the kernel body itself, not performance; the ref row above is the
+    # CPU execution path)
+    xs = jnp.asarray(rng.randn(32, 256), jnp.float32)
+    ws = jnp.asarray(rng.randn(256, 256), jnp.float32)
+    qts = qlib.quantize(ws, bits=4, block=128, mode="nf4")
+    f = jax.jit(lambda x: qmm_pallas(x, qts, block_m=32, block_n=128,
+                                     interpret=True))
+    rows.append(f"kernel/qmm_pallas_interpret/nf44,{_time(f, xs)*1e6:.0f},"
+                f"shape=32x256x256")
+    # fused LoRA matmul vs the legacy einsum chain (jitted CPU execution
+    # paths: ops.lora_matmul's fused ref vs base-matmul + separate
+    # delta), forward and forward+backward
+    K, N, r, scale = 1024, 1024, 8, 2.0
+    a = jnp.asarray(rng.randn(K, r) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.randn(r, N) * 0.1, jnp.float32)
+    ct = jnp.asarray(rng.randn(512, N), jnp.float32)
+
+    def _best2(fa, fb, *args, reps=3, iters=10):
+        # interleaved min-over-repeats: this 2-core container's
+        # scheduler noise easily dwarfs the fused-vs-chain delta, and
+        # timing one side to completion first biases against it
+        ta, tb = [], []
+        for _ in range(reps):
+            ta.append(_time(fa, *args, iters=iters))
+            tb.append(_time(fb, *args, iters=iters))
+        return min(ta), min(tb)
+
+    for bits, mode in ((8, "linear"), (4, "nf4")):
+        qt = qlib.quantize(w, bits=bits, block=128, mode=mode)
+
+        def chain(x, a, b, qt=qt):
+            xf = x.astype(jnp.float32)
+            base = ref.quant_matmul(xf, qt)
+            h = jnp.einsum("mk,kr->mr", xf, a)
+            return (base + scale * (h @ b)).astype(x.dtype)
+
+        def fused(x, a, b, qt=qt):
+            return kops.lora_matmul(x, qt, a, b, scale=scale)
+
+        # the two fwd programs compile to identical HLO on CPU (both
+        # execute the fp32-fused ref path), so extra reps just converge
+        # the mins of the same program
+        t_f, t_c = _best2(jax.jit(fused), jax.jit(chain), x, a, b,
+                          reps=5, iters=20)
+        rows.append(f"kernel/lora_fused_fwd/{mode}{bits},{t_f*1e6:.0f},"
+                    f"chain_us={t_c*1e6:.0f};"
+                    f"speedup={t_c/t_f:.2f}x")
+        # value_and_grad so the training step's forward gemm can't be
+        # dead-coded, and ct passed as a traced argument — a closed-over
+        # cotangent is a compile-time constant and XLA folds the whole
+        # g @ Wᵀ gemm away, timing neither path's backward
+        gf = jax.jit(jax.value_and_grad(
+            lambda x, a, b, ct: (fused(x, a, b) * ct).sum(),
+            argnums=(0, 1, 2)))
+        gc = jax.jit(jax.value_and_grad(
+            lambda x, a, b, ct: (chain(x, a, b) * ct).sum(),
+            argnums=(0, 1, 2)))
+        t_fb, t_cb = _best2(gf, gc, x, a, b, ct)
+        rows.append(f"kernel/lora_fused_bwd/{mode}{bits},{t_fb*1e6:.0f},"
+                    f"chain_us={t_cb*1e6:.0f};"
+                    f"speedup={t_cb/t_fb:.2f}x")
+    # int8 quantized-compute GAN gemm vs fp gemm conv
+    from repro.kernels import gan_conv
+    xg = jnp.asarray(rng.randn(8, 16, 16, 32), jnp.float32)
+    wg = jnp.asarray(rng.randn(4, 4, 32, 64) * 0.1, jnp.float32)
+    t8 = _time(jax.jit(gan_conv.conv4x4_s2_int8), xg, wg)
+    tf = _time(jax.jit(gan_conv.conv4x4_s2), xg, wg)
+    rows.append(f"kernel/gan_conv_int8,{t8*1e6:.0f},"
+                f"fp_us={tf*1e6:.0f};shape=8x16x16x32->64")
     # blockwise quant
     g = jnp.asarray(rng.randn(4096, 512), jnp.float32)
     f = jax.jit(lambda g: jax.tree.leaves(qlib.quantize(g, bits=8,

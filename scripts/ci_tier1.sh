@@ -194,6 +194,90 @@ print("forced-8-device sharded smoke OK:",
        "loss_by_k": sweep})
 EOF3
 
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF4'
+import os
+import tempfile
+
+import jax, jax.numpy as jnp
+import numpy as np
+
+from repro.core import clip as clip_lib
+from repro.data.synthetic import class_tokens, make_dataset
+from repro.fl import client as client_lib, cohort as cohort_lib
+from repro.fl.runtime import ProgramRuntime
+from repro.fl.strategies import STRATEGIES
+from repro.kernels import autotune, ops as kops
+
+# fused-LoRA smoke: the qlora arm's cohort round must route every LoRA
+# projection through the fused kernels.ops.lora_matmul — if the legacy
+# einsum chain is silently taken, the trace counters catch it here
+strat = STRATEGIES["qlora_nogan"]
+ccfg = clip_lib.CLIPConfig()
+frozen = clip_lib.init_clip(jax.random.PRNGKey(3), ccfg)
+data = make_dataset("pacs", n_per_class=12, seed=0, longtail_gamma=1.0)
+spec = data["spec"]
+class_emb = clip_lib.text_embedding(
+    frozen, ccfg,
+    jnp.asarray(class_tokens(spec, np.arange(spec.n_classes))))
+clients = [client_lib.Client(
+    cid=i, images=data["images"][6 * i:6 * i + 6],
+    labels=data["labels"][6 * i:6 * i + 6],
+    n_classes=spec.n_classes, strategy=strat) for i in range(2)]
+tr = client_lib.init_trainable(jax.random.PRNGKey(1), ccfg, strat)
+kops.reset_kernel_traces()
+engine = cohort_lib.CohortEngine(
+    frozen=frozen, ccfg=ccfg, class_emb=class_emb, clients=clients,
+    cfg=cohort_lib.CohortConfig(strategy=strat, local_steps=2,
+                                batch_size=4, lr=3e-3))
+tr, m = engine.run_round(tr, jax.random.PRNGKey(0))
+assert np.isfinite(np.asarray(m["loss"])).all()
+assert kops.KERNEL_TRACES.get("lora_linear_fused", 0) > 0, \
+    ("qlora cohort round never traced the fused LoRA op",
+     dict(kops.KERNEL_TRACES))
+assert kops.KERNEL_TRACES.get("lora_linear_chain", 0) == 0, \
+    ("qlora cohort round silently took the einsum chain",
+     dict(kops.KERNEL_TRACES))
+
+# autotune smoke: a block-shape sweep persists its winners; repeating
+# the same sweep must be pure cache hits — zero candidate timings, zero
+# new entries in the compile ledger
+with tempfile.TemporaryDirectory() as d:
+    path = os.path.join(d, "autotune.json")
+    x = jnp.asarray(np.random.RandomState(0).randn(32, 256), jnp.float32)
+    from repro.core import quant as qlib
+    from repro.kernels.quant_matmul import quant_matmul as qmm
+    qt = qlib.quantize(
+        jnp.asarray(np.random.RandomState(1).randn(256, 128), jnp.float32),
+        bits=8, block=128, mode="linear")
+
+    def build(bm, bn):
+        f = jax.jit(lambda x: qmm(x, qt, block_m=bm, block_n=bn,
+                                  interpret=True))
+        return lambda: jax.block_until_ready(f(x))
+
+    autotune.clear(in_process_only=True)
+    rt = ProgramRuntime()
+    r1 = autotune.sweep("quant_matmul", build, 32, 256, 128, bits=8,
+                        mode="linear", candidates=((32, 64), (32, 128)),
+                        runtime=rt, path=path)
+    assert r1.swept and r1.n_candidates == 2, r1
+    led1 = rt.stats()["autotune_quant_matmul"]
+    assert led1["n_compiles"] == 2 and led1["compile_time_s"] > 0, led1
+    autotune.clear(in_process_only=True)   # drop RAM, keep the JSON
+    r2 = autotune.sweep("quant_matmul", build, 32, 256, 128, bits=8,
+                        mode="linear", candidates=((32, 64), (32, 128)),
+                        runtime=rt, path=path)
+    assert not r2.swept and r2.best == r1.best, (r1, r2)
+    led2 = rt.stats()["autotune_quant_matmul"]
+    assert led2 == led1, \
+        ("repeated autotune sweep charged the compile ledger again",
+         led1, led2)
+print("fused-LoRA + autotune smoke OK:",
+      {"lora_traces": {k: v for k, v in kops.KERNEL_TRACES.items()
+                       if k.startswith("lora")},
+       "autotune_best": r1.best, "second_sweep_hit": not r2.swept})
+EOF4
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'EOF2'
 import numpy as np
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import losses
+from repro.core import lora as lora_lib
 
 
 @dataclass(frozen=True)
@@ -79,16 +80,25 @@ def _ln(x, w, eps=1e-6):
     return (x - mu) * jax.lax.rsqrt(var + eps) * (1 + w)
 
 
+# TriplePlay's fixed LoRA scaling alpha/r for the CLIP blocks: the lin
+# closure historically hard-coded `delta * 2.0`; routing through
+# lora_lib.linear keeps that exact factor (alpha = LORA_SCALE * r).
+LORA_SCALE = 2.0
+
+
 def _block(p, x, n_heads, causal=False, lora=None):
     B, S, d = x.shape
     dh = d // n_heads
 
     def lin(name, h):
-        y = h @ p[name]
-        if lora is not None and name in lora:
-            la = lora[name]
-            y = y + (h @ la["a"]) @ la["b"] * 2.0
-        return y
+        la = None if lora is None else lora.get(name)
+        if la is not None:
+            r = la["a"].shape[-1]
+            # fused base+LoRA op (kernels.ops.lora_matmul): one kernel,
+            # fp32 accumulation, custom VJP
+            return lora_lib.linear(h, p[name], la,
+                                   alpha=LORA_SCALE * r, rank=r)
+        return lora_lib.linear(h, p[name])
 
     h = _ln(x, p["ln1"])
     q = lin("wq", h).reshape(B, S, n_heads, dh)
@@ -101,7 +111,8 @@ def _block(p, x, n_heads, causal=False, lora=None):
     o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S, d)
     x = x + lin("wo", o)
     h = _ln(x, p["ln2"])
-    return x + jax.nn.gelu(h @ p["wu"]) @ p["wd"]
+    return x + lora_lib.linear(jax.nn.gelu(
+        lora_lib.linear(h, p["wu"])), p["wd"])
 
 
 def _run_blocks(blocks, x, n_heads, causal, lora=None):

@@ -57,7 +57,10 @@ class GANConfig:
     g_dim: int = 32
     d_dim: int = 32
     lr: float = 2e-4
-    conv_impl: str = "lax"       # "lax" | "gemm" (kernels.gan_conv)
+    # "lax" | "gemm" (kernels.gan_conv phase-decomposed gemms) |
+    # "gemm_int8" (same gemm forms with blockwise-int8 quantized
+    # compute, fp32 accumulation — trains *with* quantized matmuls)
+    conv_impl: str = "lax"
 
 
 def init_gan(rng, cfg: GANConfig):
@@ -88,6 +91,11 @@ def init_gan(rng, cfg: GANConfig):
 def _convT(x, w, stride=2, impl="lax"):
     if impl == "gemm":
         return gan_conv.convT4x4_s2(x, w)
+    if impl == "gemm_int8":
+        return gan_conv.convT4x4_s2_int8(x, w)
+    if impl != "lax":
+        raise ValueError(f"unknown conv_impl {impl!r} "
+                         "(expected lax | gemm | gemm_int8)")
     return lax.conv_transpose(x, w, (stride, stride), "SAME",
                               dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
@@ -95,6 +103,11 @@ def _convT(x, w, stride=2, impl="lax"):
 def _conv(x, w, stride=2, impl="lax"):
     if impl == "gemm":
         return gan_conv.conv4x4_s2(x, w)
+    if impl == "gemm_int8":
+        return gan_conv.conv4x4_s2_int8(x, w)
+    if impl != "lax":
+        raise ValueError(f"unknown conv_impl {impl!r} "
+                         "(expected lax | gemm | gemm_int8)")
     return lax.conv_general_dilated(
         x, w, (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))

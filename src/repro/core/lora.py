@@ -7,12 +7,20 @@ are trained and communicated in TriplePlay.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.quant import QTensor, maybe_dequantize
+
+
+def _fused_enabled() -> bool:
+    """Fused LoRA matmul routing, read *dynamically* so benches/CI can
+    flip the legacy einsum chain back on (``REPRO_LORA_FUSED=0``) for
+    chain-vs-fused comparisons without re-importing."""
+    return os.environ.get("REPRO_LORA_FUSED", "1") != "0"
 
 
 def init_pair(rng, k: int, n: int, rank: int, dtype=jnp.float32):
@@ -28,25 +36,43 @@ def pair_specs(k: int, n: int, rank: int, dtype=jnp.float32, lead=()):
 
 
 def apply(x: jax.Array, lora, *, alpha: float, rank: int) -> jax.Array:
-    """Compute the low-rank delta (alpha/r)·(x@A)@B in f32, cast back."""
+    """Compute the low-rank delta (alpha/r)·(x@A)@B in f32, cast back.
+
+    The upcast is on *x and both factors*: with bf16 trainables the old
+    ``x.astype(lora["a"].dtype)`` accumulated the whole chain in bf16,
+    silently breaking the f32 promise (regression-pinned in
+    tests/test_lora_adapter.py)."""
     s = alpha / rank
-    h = jnp.einsum("...k,kr->...r", x.astype(lora["a"].dtype), lora["a"])
-    return (jnp.einsum("...r,rn->...n", h, lora["b"]) * s).astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    h = jnp.einsum("...k,kr->...r", xf, lora["a"].astype(jnp.float32))
+    d = jnp.einsum("...r,rn->...n", h, lora["b"].astype(jnp.float32))
+    return (d * s).astype(x.dtype)
 
 
 def linear(x: jax.Array, w, lora=None, *, alpha: float = 32.0,
            rank: int = 16) -> jax.Array:
     """y = x @ W(+dequant) [+ LoRA delta]. ``w`` may be a QTensor.
 
-    On TPU the QTensor path dispatches to the fused Pallas dequant-matmul
-    (kernels/ops.py); elsewhere it dequantizes inline (same math).
+    With a LoRA pair attached this routes through the fused op
+    (``kernels.ops.lora_matmul``): base gemm + low-rank delta in one
+    kernel with fp32 accumulation and a custom VJP — the Pallas fused
+    kernel on TPU/interpret, the fused jnp reference elsewhere. Set
+    ``REPRO_LORA_FUSED=0`` to force the legacy einsum chain (bench /
+    parity comparisons). Without LoRA, the QTensor path dispatches to
+    the fused Pallas dequant-matmul (kernels/ops.py); elsewhere it
+    dequantizes inline (same math).
     """
+    from repro.kernels import ops as kops  # late import: no cycles
+    if lora is not None and _fused_enabled():
+        kops.trace_count("lora_linear_fused")
+        return kops.lora_matmul(x, w, lora["a"], lora["b"],
+                                scale=alpha / rank)
     if isinstance(w, QTensor):
-        from repro.kernels import ops as kops  # late import: no cycles
         y = kops.quant_matmul(x, w)
     else:
         y = jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
     if lora is not None:
+        kops.trace_count("lora_linear_chain")
         y = y + apply(x, lora, alpha=alpha, rank=rank)
     return y
 

@@ -81,6 +81,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clip as clip_lib
+from repro.core import lora as lora_lib
 from repro.core import losses, optim, quant
 from repro.core.quant import tree_bytes
 from repro.data.synthetic import stage_client_pools
@@ -353,10 +354,16 @@ class CohortEngine:
         self._uplink_per_client: Optional[int] = None
         # programs the engine closes over self.cfg/self.ccfg for: the
         # runtime cache key must carry those statics so engines sharing
-        # one runtime (benchmark sweeps) never collide
+        # one runtime (benchmark sweeps) never collide. The LoRA matmul
+        # routing (fused op vs legacy einsum chain, REPRO_LORA_FUSED) is
+        # read at trace time inside core.lora.linear, so it is a static
+        # of the traced program too — without it a bench flipping the
+        # env var between engines would hit a stale executable compiled
+        # for the other path
         self._static_key = (cfg.strategy, ccfg, cfg.local_steps,
                             cfg.batch_size, cfg.lr, self._het,
-                            self.max_steps, cfg.mesh)
+                            self.max_steps, cfg.mesh,
+                            lora_lib._fused_enabled())
         if gan_job is not None:
             self._merge_gan_features(gan_job, clients)
 

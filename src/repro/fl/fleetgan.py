@@ -86,6 +86,13 @@ _DEFAULT_RUNTIME = runtime_lib.ProgramRuntime()
 class FleetGANConfig:
     """Fleet-engine execution knobs.
 
+    ``conv_impl`` — conv lowering for every stacked GAN program:
+    ``"gemm"`` (default, the phase-decomposed gemm kernels),
+    ``"gemm_int8"`` (same gemm forms with blockwise-int8 quantized
+    compute + fp32 accumulation — trains *with* quantized matmuls,
+    §IV's resource knob beyond uplink quantization), or ``"lax"``
+    (the conv primitives; slow on CPU, see kernels/gan_conv.py).
+
     ``bucket_batches`` — True (default) pads every client's GAN
     minibatch to the cohort-wide bucket so all batch-size groups share
     **one** train compile (plus the mean-correction arithmetic).

@@ -258,6 +258,17 @@ class ProgramRuntime:
             kind, {"n_compiles": 0, "compile_time_s": 0.0})
         k[counter] = int(k.get(counter, 0)) + int(n)
 
+    def charge(self, kind: str, seconds: float, n: int = 1) -> None:
+        """Charge ``seconds`` of compile-class wall-clock (and ``n``
+        compile events) to ``kind`` directly — the kernel autotuner
+        (``kernels.autotune``) books its block-shape sweep time here, so
+        tuning cost appears in the same ``stats()`` breakdown as AOT
+        compile cost instead of in a side ledger."""
+        k = self._kinds.setdefault(
+            kind, {"n_compiles": 0, "compile_time_s": 0.0})
+        k["n_compiles"] += int(n)
+        k["compile_time_s"] += float(seconds)
+
     def dispatch(self, kind: str, build, args, **kw) -> Handle:
         """Compile-or-hit, then execute without forcing a host sync."""
         return Handle(self.compile(kind, build, args, **kw)(*args))

@@ -34,6 +34,15 @@ fp32 backing trees, one jitted per-request dispatch (the honest
 sequential baseline the benchmark compares against). The batched plane
 must match it to tolerance (exact when the store is unquantized).
 
+The LoRA tower (ROADMAP item 2's leftover) gets its serving win from
+the shared forward, not serve-local code: ``clip._block`` routes every
+per-tenant LoRA projection through ``core.lora.linear`` — the fused
+base+delta op (``kernels.ops.lora_matmul``: one kernel, fp32
+accumulation) — so the vmapped per-user towers execute fused gemms
+instead of the einsum chain, and stacked quantized-at-rest slabs take
+the vmapped Pallas ``quant_matmul`` path rather than a silent ref
+fallback (``kernels.ops``).
+
 Ledger: every dispatch charges ``serve_batch`` counters
 (``n_flights``/``n_groups``/``n_requests``) via
 ``ProgramRuntime.count`` next to its compile counts — CI reads them to

@@ -1,0 +1,176 @@
+"""Block-shape autotuning for the Pallas kernels.
+
+The fused kernels (``quant_matmul``, ``lora_matmul``) take static
+``block_m``/``block_n`` tile shapes; the right choice depends on the
+backend and the problem geometry. This harness sweeps a candidate list
+once per ``(backend, kernel, shape-bucket)`` and caches the winner —
+keyed like the :class:`~repro.fl.runtime.ProgramRuntime` executable
+cache (kind + static config + a bucketed argument-shape signature), in
+process *and* persisted as JSON (``REPRO_AUTOTUNE_CACHE``, default
+``~/.cache/repro/autotune.json``) so later processes start warm.
+
+Contract (pinned by tests/test_kernels.py and the CI smoke):
+
+- ``lookup`` never sweeps — it returns the cached winner or the
+  default, so hot paths pay a dict probe, not a compile.
+- ``sweep`` on a cached key is a pure hit: no timing, no compiles, no
+  ledger charge — a repeated sweep adds *zero* compiles to the runtime
+  ledger.
+- sweep wall-clock (compiles + timing runs) is charged to the compile
+  ledger (``ProgramRuntime.charge``) under ``autotune_<kernel>``, so
+  ``History.meta``-style accounting sees tuning cost exactly where it
+  sees compile cost.
+
+The M (row) dimension buckets to powers of two (the same bucketing the
+cohort runtime applies to widths) so a ragged row-count sweep shares
+one tuning entry; K/N/bits/mode are exact — they change the kernel's
+inner tiling, not just its trip count.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+# candidate (block_m, block_n) tiles per kernel — small, curated lists:
+# the sweep cost is real compile time, charged to the ledger
+CANDIDATES: Dict[str, Tuple[Tuple[int, int], ...]] = {
+    "quant_matmul": ((64, 128), (128, 128), (128, 256), (256, 256)),
+    "lora_matmul": ((64, 128), (128, 128), (128, 256), (256, 256)),
+}
+DEFAULT_BLOCKS: Tuple[int, int] = (256, 256)
+
+_CACHE: Dict[str, Tuple[int, int]] = {}
+_LOADED: set = set()
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "autotune.json"))
+
+
+def _pow2_bucket(n: int) -> int:
+    return 1 << (max(1, int(n)) - 1).bit_length()
+
+
+def key_for(kernel: str, M: int, K: int, N: int, *, bits: int = 0,
+            mode: str = "", backend: Optional[str] = None) -> str:
+    """Cache key: backend + kernel + bucketed shape signature (the
+    in-process analogue of the ProgramRuntime ``(kind, static_key,
+    arg-sig)`` tuple, flattened to a JSON-safe string)."""
+    backend = backend or jax.default_backend()
+    return "/".join((backend, kernel, f"M{_pow2_bucket(M)}", f"K{K}",
+                     f"N{N}", f"b{bits}{mode}"))
+
+
+def _load(path: str) -> None:
+    if path in _LOADED:
+        return
+    _LOADED.add(path)
+    try:
+        with open(path) as f:
+            disk = json.load(f)
+    except (OSError, ValueError):
+        return
+    for k, v in disk.items():
+        _CACHE.setdefault(k, (int(v[0]), int(v[1])))
+
+
+def _save(path: str) -> None:
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({k: list(v) for k, v in sorted(_CACHE.items())},
+                      f, indent=1)
+    except OSError:
+        pass                      # persistence is best-effort
+
+
+def clear(*, in_process_only: bool = True) -> None:
+    """Drop the in-process cache (tests); the JSON file is left alone
+    unless ``in_process_only=False``."""
+    _CACHE.clear()
+    _LOADED.clear()
+    if not in_process_only:
+        try:
+            os.remove(cache_path())
+        except OSError:
+            pass
+
+
+def lookup(kernel: str, M: int, K: int, N: int, *, bits: int = 0,
+           mode: str = "", default: Tuple[int, int] = DEFAULT_BLOCKS,
+           path: Optional[str] = None) -> Tuple[int, int]:
+    """Cached winner for this shape bucket, or ``default``. Never
+    sweeps, never compiles — safe on the hot dispatch path."""
+    path = path or cache_path()
+    _load(path)
+    return _CACHE.get(key_for(kernel, M, K, N, bits=bits, mode=mode),
+                      default)
+
+
+@dataclass
+class SweepResult:
+    key: str
+    best: Tuple[int, int]
+    swept: bool              # False = cache hit (zero new compiles)
+    n_candidates: int
+    time_s: float
+    timings: Dict[str, float]
+
+
+def sweep(kernel: str, build: Callable[[int, int], Callable[[], object]],
+          M: int, K: int, N: int, *, bits: int = 0, mode: str = "",
+          candidates: Optional[Sequence[Tuple[int, int]]] = None,
+          runtime=None, path: Optional[str] = None,
+          iters: int = 2) -> SweepResult:
+    """Time ``build(block_m, block_n)()`` over the candidate tiles and
+    cache the fastest for this ``(backend, kernel, shape-bucket)`` key.
+
+    ``build`` returns a zero-arg thunk running the kernel at that tile
+    (closing over its operands); the first call per candidate pays the
+    compile, then ``iters`` calls are timed. A key already cached (in
+    process or in the JSON file) returns immediately — all-hits, zero
+    compiles, zero ledger charge. Otherwise total sweep wall-clock is
+    charged to ``runtime``'s compile ledger as ``autotune_<kernel>``.
+    """
+    path = path or cache_path()
+    _load(path)
+    key = key_for(kernel, M, K, N, bits=bits, mode=mode)
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return SweepResult(key=key, best=hit, swept=False,
+                           n_candidates=0, time_s=0.0, timings={})
+    cands = tuple(candidates if candidates is not None
+                  else CANDIDATES.get(kernel, (DEFAULT_BLOCKS,)))
+    if not cands:
+        raise ValueError(f"empty candidate list for {kernel}")
+    t_sweep0 = time.perf_counter()
+    timings: Dict[str, float] = {}
+    best, best_t = None, float("inf")
+    for bm, bn in cands:
+        fn = build(int(bm), int(bn))
+        out = fn()                                   # compile + warm
+        jax.block_until_ready(jax.tree.leaves(out))
+        t0 = time.perf_counter()
+        for _ in range(max(1, iters)):
+            out = fn()
+        jax.block_until_ready(jax.tree.leaves(out))
+        dt = (time.perf_counter() - t0) / max(1, iters)
+        timings[f"{bm}x{bn}"] = dt
+        if dt < best_t:
+            best, best_t = (int(bm), int(bn)), dt
+    total = time.perf_counter() - t_sweep0
+    _CACHE[key] = best
+    _save(path)
+    if runtime is not None:
+        runtime.charge(f"autotune_{kernel}", total, n=len(cands))
+    return SweepResult(key=key, best=best, swept=True,
+                       n_candidates=len(cands), time_s=total,
+                       timings=timings)

@@ -232,3 +232,159 @@ def _convT_bwd(res, g):
 
 
 convT4x4_s2.defvjp(_convT_fwd, _convT_bwd)
+
+
+# ---------------------------------------------------------------------
+# int8 quantized-compute variants (GANConfig.conv_impl="gemm_int8"):
+# the *same* phase-decomposed gemm forms, but every matmul quantizes
+# both operands blockwise to int8 along the contraction dim, multiplies
+# in int8->int32, and accumulates the scaled block partials in fp32 —
+# training *with* quantized matmuls (QA-LoRA-style quantized compute),
+# not merely quantized uplink. Gradients flow straight-through: the
+# custom VJPs express dx/dw through the identical quantized gemms over
+# the true cotangents (the round-to-int8 step itself has zero gradient
+# almost everywhere, as usual for quantization-aware training).
+# ---------------------------------------------------------------------
+INT8_BLOCK = 64
+
+
+def _q8_rows(x, blk):
+    """(M, K) -> int8 codes (M, G, blk) + f32 absmax scales (M, G),
+    blockwise along the contraction dim (zero-padded to a block
+    multiple; pad columns quantize to exact zeros)."""
+    M, K = x.shape
+    Kp = -(-K // blk) * blk
+    if Kp != K:
+        x = jnp.pad(x, ((0, 0), (0, Kp - K)))
+    xg = x.reshape(M, Kp // blk, blk)
+    s = jnp.max(jnp.abs(xg), axis=-1) / 127.0
+    safe = jnp.where(s == 0, 1.0, s)
+    q = jnp.clip(jnp.round(xg / safe[..., None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def quant_gemm_int8(x: jax.Array, w: jax.Array,
+                    blk: int = INT8_BLOCK) -> jax.Array:
+    """Quantized-compute ``x (M, K) @ w (K, N) -> (M, N) f32``: both
+    operands blockwise-int8 along K (per-row × per-column absmax
+    scales), int8×int8→int32 block products, fp32 accumulation of the
+    scaled partials. A ``lax.scan`` over the K-blocks bounds live
+    memory to one (M, N) accumulator."""
+    M, K = x.shape
+    if w.shape[0] != K:
+        raise ValueError(f"contraction mismatch: x {x.shape} w {w.shape}")
+    N = w.shape[1]
+    b = min(blk, K)
+    qx, sx = _q8_rows(x.astype(jnp.float32), b)       # (M, G, b), (M, G)
+    qw, sw = _q8_rows(w.astype(jnp.float32).T, b)     # (N, G, b), (N, G)
+
+    def step(acc, g):
+        p = lax.dot_general(qx[:, g], qw[:, g],
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.int32)
+        return acc + p.astype(jnp.float32) * sx[:, g, None] * \
+            sw[None, :, g], None
+
+    acc, _ = lax.scan(step, jnp.zeros((M, N), jnp.float32),
+                      jnp.arange(qx.shape[1]))
+    return acc
+
+
+def _convT_q8(x, w):
+    """``_convT`` with the inner gemm quantized (int8 compute)."""
+    b, h, ww, ci = x.shape
+    co = w.shape[3]
+    H, W = h + 1, ww + 1
+    if co < 8:
+        contrib = quant_gemm_int8(
+            x.reshape(-1, ci),
+            w.transpose(2, 0, 1, 3).reshape(ci, 16 * co)
+        ).reshape(b, h, ww, 4, 4, co)
+        phases = []
+        for p in (0, 1):
+            for q in (0, 1):
+                acc = 0
+                for s in (0, 1):
+                    for t in (0, 1):
+                        acc = acc + jnp.pad(
+                            contrib[:, :, :, 3 - (p + 2 * s),
+                                    3 - (q + 2 * t), :],
+                            ((0, 0), (s, 1 - s), (t, 1 - t), (0, 0)))
+                phases.append(acc)
+        g = jnp.stack(phases, axis=3).reshape(b, H, W, 2, 2, co)
+    else:
+        xs = jnp.concatenate(
+            [jnp.pad(x, ((0, 0), (s, 1 - s), (t, 1 - t), (0, 0)))
+             for s in (0, 1) for t in (0, 1)], axis=-1)
+        wt = jnp.concatenate([
+            jnp.concatenate([w[3 - (p + 2 * s), 3 - (q + 2 * t)]
+                             for s in (0, 1) for t in (0, 1)], axis=0)
+            for p in (0, 1) for q in (0, 1)], axis=1)   # (4ci, 4co)
+        g = quant_gemm_int8(xs.reshape(-1, 4 * ci), wt) \
+            .reshape(b, H, W, 2, 2, co)
+    g = g.transpose(0, 1, 3, 2, 4, 5).reshape(b, 2 * H, 2 * W, co)
+    return g[:, 1:2 * h + 1, 1:2 * ww + 1, :]
+
+
+@jax.custom_vjp
+def conv4x4_s2_int8(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``conv4x4_s2`` with the patch-matrix gemm in int8 quantized
+    compute (fp32 accumulation). Same shapes/geometry contract."""
+    b, h, ww, ci = x.shape
+    kh, kw, wci, co = w.shape
+    if (kh, kw) != (4, 4) or wci != ci or h % 2 or ww % 2:
+        raise ValueError(f"conv4x4_s2_int8 needs a 4x4 kernel on even "
+                         f"dims, got x {x.shape} w {w.shape}")
+    cols = _im2col(x)
+    return quant_gemm_int8(cols.reshape(-1, 16 * ci),
+                           w.reshape(16 * ci, co)) \
+        .reshape(b, h // 2, ww // 2, co).astype(x.dtype)
+
+
+def _conv_i8_fwd(x, w):
+    return conv4x4_s2_int8(x, w), (x, w)
+
+
+def _conv_i8_bwd(res, g):
+    x, w = res
+    ci, co = w.shape[2], w.shape[3]
+    dx = _convT_q8(g, _flip_T(w)).astype(x.dtype)
+    cols = _im2col(x)
+    dw = quant_gemm_int8(cols.reshape(-1, 16 * ci).T,
+                         g.reshape(-1, co).astype(jnp.float32)) \
+        .reshape(4, 4, ci, co).astype(w.dtype)
+    return dx, dw
+
+
+conv4x4_s2_int8.defvjp(_conv_i8_fwd, _conv_i8_bwd)
+
+
+@jax.custom_vjp
+def convT4x4_s2_int8(x: jax.Array, w: jax.Array) -> jax.Array:
+    """``convT4x4_s2`` with the phase/contribution gemm in int8
+    quantized compute (fp32 accumulation)."""
+    b, h, ww, ci = x.shape
+    kh, kw, wci, co = w.shape
+    if (kh, kw) != (4, 4) or wci != ci:
+        raise ValueError(f"convT4x4_s2_int8 needs a 4x4 kernel, got x "
+                         f"{x.shape} w {w.shape}")
+    return _convT_q8(x, w).astype(x.dtype)
+
+
+def _convT_i8_fwd(x, w):
+    return convT4x4_s2_int8(x, w), (x, w)
+
+
+def _convT_i8_bwd(res, g):
+    x, w = res
+    ci, co = w.shape[2], w.shape[3]
+    dx = quant_gemm_int8(_im2col(g).reshape(-1, 16 * co),
+                         _flip_T(w).reshape(16 * co, ci)) \
+        .reshape(x.shape).astype(x.dtype)
+    dw = quant_gemm_int8(x.reshape(-1, ci).T.astype(jnp.float32),
+                         _im2col_T(g).reshape(-1, 16 * co)) \
+        .reshape(ci, 4, 4, co).transpose(1, 2, 0, 3).astype(w.dtype)
+    return dx, dw
+
+
+convT4x4_s2_int8.defvjp(_convT_i8_fwd, _convT_i8_bwd)

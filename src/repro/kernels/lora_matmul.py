@@ -1,0 +1,195 @@
+"""Pallas TPU fused LoRA matmul — the QLoRA arm's whole linear layer
+in one kernel (§III-C).
+
+Computes ``y = x @ dequant(W_q) + scale * (x @ A) @ B`` without ever
+materializing the dequantized weight: the quantized tiles stream
+HBM→VMEM and are dequantized in-register exactly as in
+``kernels.quant_matmul`` (the shared ``dequant_tile``), while the LoRA
+factors ride the same grid — A is blocked along the contraction dim by
+the quant groups (an ``(bm, r)`` f32 VMEM scratch accumulates ``x @ A``
+alongside the main ``(bm, bn)`` accumulator), and B joins at the final
+group with one tiny ``(r, bn)`` gemm before the flush. All accumulation
+is fp32.
+
+``quant_matmul_t`` is the backward-pass companion: ``g @ dequant(W)ᵀ``
+through the same streamed tiles (grid minormost over the N blocks, the
+output tile indexed by quant group), which is the ``dx``-through-Wᵀ
+gemm of the custom VJP in ``kernels.ops.lora_matmul``.
+
+TARGET: TPU. Validated with interpret=True vs ``kernels/ref.py``
+(``ref.lora_matmul`` — also the CPU execution path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import NF4_CODE, QTensor
+from repro.kernels.quant_matmul import dequant_tile
+
+
+def _lora_kernel(x_ref, q_ref, s_ref, code_ref, a_ref, b_ref, o_ref,
+                 acc_ref, h_ref, *, bits, mode, ng, scale):
+    gi = pl.program_id(2)
+
+    @pl.when(gi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # (bm, block)
+    w = dequant_tile(q_ref, s_ref, code_ref, bits=bits, mode=mode)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    h_ref[...] += jax.lax.dot_general(              # (bm, r) += x @ A_g
+        x, a_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(gi == ng - 1)
+    def _flush():
+        delta = jax.lax.dot_general(                # (bm, bn) = h @ B
+            h_ref[...], b_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scale * delta).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_m",
+                                             "block_n", "interpret"))
+def lora_matmul(x, qt: QTensor, a, b, *, scale: float, block_m=256,
+                block_n=256, interpret=False):
+    """``x (..., K) @ dequant(qt (K, N)) + scale·(x@A)@B -> (..., N)``
+    in one kernel. ``qt`` may cover a K zero-padded to a block multiple
+    (the odd-K ``blockwise_quant`` contract) — x and A zero-pad rows to
+    match, which contracts identically. ``a``: (K, r); ``b``: (r, N)."""
+    *lead, K = x.shape
+    M = 1
+    for s in lead:
+        M *= s
+    x2 = x.reshape(M, K)
+    Kq = qt.q.shape[0] * qt.block
+    if Kq != K:
+        if Kq < K or (Kq - K) >= qt.block:
+            raise ValueError(
+                f"quantized contraction dim {Kq} incompatible with "
+                f"x's {K} (block {qt.block})")
+        x2 = jnp.pad(x2, ((0, 0), (0, Kq - K)))
+    if a.shape[0] != K:
+        raise ValueError(f"LoRA A rows {a.shape[0]} != contraction {K}")
+    a2 = jnp.pad(a, ((0, Kq - K), (0, 0))) if Kq != K else a
+    G = qt.q.shape[0]
+    N = qt.q.shape[-1]
+    r = a.shape[-1]
+    block = qt.block
+    bm = min(block_m, max(8, M))
+    bn = min(block_n, N)
+    Mp = -(-M // bm) * bm
+    Np = -(-N // bn) * bn
+    if Mp != M:
+        x2 = jnp.pad(x2, ((0, Mp - M), (0, 0)))
+    qv, sv, b2 = qt.q, qt.scales, b
+    if Np != N:
+        qv = jnp.pad(qv, ((0, 0), (0, 0), (0, Np - N)))
+        sv = jnp.pad(sv, ((0, 0), (0, 0), (0, Np - N)))
+        b2 = jnp.pad(b, ((0, 0), (0, Np - N)))
+    rows = qv.shape[1]                     # block or block//2 (packed)
+    grid = (Mp // bm, Np // bn, G)
+
+    code = jnp.asarray(NF4_CODE).reshape(1, 16)
+    out = pl.pallas_call(
+        functools.partial(_lora_kernel, bits=qt.bits, mode=qt.mode,
+                          ng=G, scale=float(scale)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, block), lambda mi, ni, gi: (mi, gi)),
+            pl.BlockSpec((1, rows, bn), lambda mi, ni, gi: (gi, 0, ni)),
+            pl.BlockSpec((1, 1, bn), lambda mi, ni, gi: (gi, 0, ni)),
+            pl.BlockSpec((1, 16), lambda mi, ni, gi: (0, 0)),
+            pl.BlockSpec((block, r), lambda mi, ni, gi: (gi, 0)),
+            pl.BlockSpec((r, bn), lambda mi, ni, gi: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, gi: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, r), jnp.float32)],
+        interpret=interpret,
+    )(x2, qv, sv, code, a2, b2)
+    return out[:M, :N].reshape(*lead, N)
+
+
+def _t_kernel(g_ref, q_ref, s_ref, code_ref, o_ref, acc_ref, *, bits,
+              mode, nn):
+    ni = pl.program_id(2)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)              # (bm, bn)
+    w = dequant_tile(q_ref, s_ref, code_ref, bits=bits, mode=mode)
+    acc_ref[...] += jax.lax.dot_general(            # (bm, block) += g @ wᵀ
+        g, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ni == nn - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def quant_matmul_t(g, qt: QTensor, *, block_m=256, block_n=256,
+                   interpret=False):
+    """``g (..., N) @ dequant(qt (K, N))ᵀ -> (..., Kq)`` — the
+    transposed contraction of ``quant_matmul``, streaming the identical
+    quantized tiles (the dx gemm of the fused LoRA VJP). The output
+    covers the padded Kq; callers slice ``[..., :K]``."""
+    *lead, N = g.shape
+    M = 1
+    for s in lead:
+        M *= s
+    g2 = g.reshape(M, N)
+    if N != qt.q.shape[-1]:
+        raise ValueError(
+            f"contraction dim {N} != quantized N {qt.q.shape[-1]}")
+    G = qt.q.shape[0]
+    block = qt.block
+    Kq = G * block
+    bm = min(block_m, max(8, M))
+    bn = min(block_n, N)
+    Mp = -(-M // bm) * bm
+    Np = -(-N // bn) * bn
+    if Mp != M:
+        g2 = jnp.pad(g2, ((0, Mp - M), (0, 0)))
+    qv, sv = qt.q, qt.scales
+    if Np != N:
+        # pad columns with zero *scales*: padded columns then dequantize
+        # to exact zeros and contract inertly
+        qv = jnp.pad(qv, ((0, 0), (0, 0), (0, Np - N)))
+        sv = jnp.pad(sv, ((0, 0), (0, 0), (0, Np - N)))
+        g2 = jnp.pad(g2, ((0, 0), (0, Np - N)))
+    rows = qv.shape[1]
+    grid = (Mp // bm, G, Np // bn)
+
+    code = jnp.asarray(NF4_CODE).reshape(1, 16)
+    out = pl.pallas_call(
+        functools.partial(_t_kernel, bits=qt.bits, mode=qt.mode,
+                          nn=Np // bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda mi, gi, ni: (mi, ni)),
+            pl.BlockSpec((1, rows, bn), lambda mi, gi, ni: (gi, 0, ni)),
+            pl.BlockSpec((1, 1, bn), lambda mi, gi, ni: (gi, 0, ni)),
+            pl.BlockSpec((1, 16), lambda mi, gi, ni: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, block), lambda mi, gi, ni: (mi, gi)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Kq), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, block), jnp.float32)],
+        interpret=interpret,
+    )(g2, qv, sv, code)
+    return out[:M].reshape(*lead, Kq)

@@ -12,6 +12,7 @@ Dispatch:
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from functools import partial
 
@@ -22,7 +23,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import compat
 from repro.core import quant as qlib
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.models import runtime as rt_lib
 
 _FORCE = os.environ.get("REPRO_PALLAS", "")  # "interpret" | "tpu" | ""
@@ -34,6 +35,22 @@ def _use_pallas() -> bool:
 
 def _interpret() -> bool:
     return _FORCE == "interpret" or jax.default_backend() != "tpu"
+
+
+# -- trace-time path counters ------------------------------------------
+# Incremented when a dispatch wrapper *traces* (once per compile, not per
+# step), so CI can assert which implementation a program actually took —
+# the "no silent fallback" guard: reset, build the program, then check
+# e.g. KERNEL_TRACES["lora_linear_fused"] > 0.
+KERNEL_TRACES: dict = {}
+
+
+def trace_count(name: str, n: int = 1) -> None:
+    KERNEL_TRACES[name] = KERNEL_TRACES.get(name, 0) + int(n)
+
+
+def reset_kernel_traces() -> None:
+    KERNEL_TRACES.clear()
 
 
 def _kernel_flash(q, k, v, *, causal, window, q_chunk=512, k_chunk=512):
@@ -124,10 +141,119 @@ def selective_scan(dt, x, Bm, Cm, A):
 
 def quant_matmul(x, qt: qlib.QTensor):
     # qt.q.ndim == 3 means a plain 2-D weight: (G, block[/2], N)
-    if _use_pallas() and qt.q.ndim == 3:
+    if _use_pallas():
         from repro.kernels import quant_matmul as qk
-        return qk.quant_matmul(x, qt, interpret=_interpret())
+        if qt.q.ndim == 3:
+            K, N = x.shape[-1], qt.q.shape[-1]
+            M = 1
+            for s in x.shape[:-1]:
+                M *= s
+            bm, bn = autotune.lookup("quant_matmul", M, K, N,
+                                     bits=qt.bits, mode=qt.mode)
+            trace_count("quant_matmul_pallas")
+            return qk.quant_matmul(x, qt, block_m=bm, block_n=bn,
+                                   interpret=_interpret())
+        if qt.q.ndim == 4:
+            # stacked (per-client) QTensor — the serve plane's vmapped
+            # per-tenant slabs: vmap the Pallas kernel over the stack
+            # axis of both operands (x: (T, [M,] K); qt.q: (T, G, ·, N))
+            if x.shape[0] != qt.q.shape[0]:
+                raise ValueError(
+                    f"stacked quant_matmul needs matching stack dims: "
+                    f"x {x.shape} vs qt.q {qt.q.shape}")
+            trace_count("quant_matmul_pallas_stacked")
+            fn = partial(qk.quant_matmul, interpret=_interpret())
+            return jax.vmap(fn)(x, qt)
+        # >1 stack axis has no Pallas mapping yet; with Pallas forced a
+        # silent ref fallback would hide exactly the regression the CI
+        # guards look for, so report it loudly instead.
+        raise NotImplementedError(
+            f"quant_matmul: no Pallas path for qt.q.ndim={qt.q.ndim} "
+            "(>1 stack axis); flatten the stack axes or unset "
+            "REPRO_PALLAS to take kernels.ref explicitly")
+    trace_count("quant_matmul_ref")
     return ref.quant_matmul(x, qt)
+
+
+# -- fused LoRA matmul (the QLoRA arm's whole linear layer) ------------
+def _lora_fwd_impl(scale, x, w, a, b):
+    if isinstance(w, qlib.QTensor) and _use_pallas() and w.q.ndim == 3:
+        from repro.kernels import lora_matmul as lk
+        K, N = x.shape[-1], w.q.shape[-1]
+        M = 1
+        for s in x.shape[:-1]:
+            M *= s
+        bm, bn = autotune.lookup("lora_matmul", M, K, N, bits=w.bits,
+                                 mode=w.mode)
+        trace_count("lora_matmul_pallas")
+        return lk.lora_matmul(x, w, a, b, scale=scale, block_m=bm,
+                              block_n=bn, interpret=_interpret())
+    trace_count("lora_matmul_ref")
+    return ref.lora_matmul(x, w, a, b, scale=scale)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _lora_mm(scale, x, w, a, b):
+    return _lora_fwd_impl(scale, x, w, a, b)
+
+
+def _lora_fwd(scale, x, w, a, b):
+    if isinstance(w, qlib.QTensor) and \
+            not (_use_pallas() and w.q.ndim == 3):
+        # ref path: the forward materializes the dequantized weight
+        # anyway, so save it as a residual — the backward's Wᵀ gemm then
+        # reuses it instead of re-dequantizing (exactly what autodiff of
+        # the einsum chain would do)
+        trace_count("lora_matmul_ref")
+        wd = qlib.dequantize(w, jnp.float32)[:x.shape[-1]]
+        return ref.lora_matmul(x, wd, a, b, scale=scale), \
+            (x, w, a, b, wd)
+    return _lora_fwd_impl(scale, x, w, a, b), (x, w, a, b, None)
+
+
+def _lora_bwd(scale, res, g):
+    x, w, a, b, wd = res
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K).astype(jnp.float32)
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    gb = g2 @ bf.T                                   # (M, r)
+    if isinstance(w, qlib.QTensor):
+        if wd is not None:
+            dxw = g2 @ wd.T                          # (M, K) exactly
+        elif _use_pallas() and w.q.ndim == 3:
+            from repro.kernels import lora_matmul as lk
+            dxw = lk.quant_matmul_t(g2, w,
+                                    interpret=_interpret())[:, :K]
+        else:
+            dxw = (g2 @ qlib.dequantize(w, jnp.float32).T)[:, :K]
+        # the quantized payload is not differentiable: int8/uint8 codes
+        # take a float0 cotangent, the f32 scales a symbolic zero
+        import numpy as np
+        dw = dataclasses.replace(
+            w, q=np.zeros(w.q.shape, jax.dtypes.float0),
+            scales=jnp.zeros_like(w.scales))
+    else:
+        wf = w.astype(jnp.float32)
+        dxw = g2 @ wf.T
+        dw = (x2.T @ g2).astype(w.dtype)
+    dx = (dxw + scale * gb @ af.T).reshape(x.shape).astype(x.dtype)
+    da = (scale * (x2.T @ gb)).astype(a.dtype)
+    db = (scale * ((x2 @ af).T @ g2)).astype(b.dtype)
+    return dx, dw, da, db
+
+
+_lora_mm.defvjp(_lora_fwd, _lora_bwd)
+
+
+def lora_matmul(x, w, a, b, *, scale: float):
+    """``y = x @ W + scale·(x@A)@B`` as ONE op with fp32 accumulation
+    and a custom VJP (dx through Wᵀ + BᵀAᵀ, dA/dB through the same
+    tiled gemms). ``w`` may be a QTensor — streamed quantized through
+    the fused Pallas kernel on TPU/interpret, ``kernels.ref`` (also
+    fp32-fused) elsewhere — or a dense matrix."""
+    return _lora_mm(float(scale), x, w, a, b)
 
 
 def blockwise_quant(x, *, bits=8, block=128, mode="linear"):

@@ -21,15 +21,12 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.quant import NF4_CODE, QTensor
 
 
-def _kernel(x_ref, q_ref, s_ref, code_ref, o_ref, acc_ref, *, bits, mode,
-            ng):
-    gi = pl.program_id(2)
-
-    @pl.when(gi == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    x = x_ref[...]                                  # (bm, block)
+def dequant_tile(q_ref, s_ref, code_ref, *, bits, mode):
+    """Dequantize one (block[/2], bn) VMEM tile in-register: unpack int4
+    pairs, map NF4 codes through the VMEM-resident codebook, apply the
+    per-block absmax scale. Shared by ``quant_matmul`` and the fused
+    LoRA kernel (``kernels.lora_matmul``) so both stream the identical
+    quantized layout."""
     qv = q_ref[0]                                   # (block[/2], bn)
     if bits == 4:
         hi = (qv >> 4).astype(jnp.int8) - 8
@@ -42,7 +39,19 @@ def _kernel(x_ref, q_ref, s_ref, code_ref, o_ref, acc_ref, *, bits, mode,
         w = jnp.take(code, (vals + 8).astype(jnp.int32))
     else:
         w = vals.astype(jnp.float32)
-    w = w * s_ref[0]                                # (block, bn) f32
+    return w * s_ref[0]                             # (block, bn) f32
+
+
+def _kernel(x_ref, q_ref, s_ref, code_ref, o_ref, acc_ref, *, bits, mode,
+            ng):
+    gi = pl.program_id(2)
+
+    @pl.when(gi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                                  # (bm, block)
+    w = dequant_tile(q_ref, s_ref, code_ref, bits=bits, mode=mode)
     acc_ref[...] += jax.lax.dot_general(
         x.astype(jnp.float32), w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)

@@ -160,14 +160,46 @@ def quant_matmul(x: jax.Array, qt: qlib.QTensor) -> jax.Array:
     ``blockwise_quant`` contract); x's contraction dim zero-pads to
     match, which contracts exactly like slicing the pad rows off."""
     w = qlib.dequantize(qt, x.dtype)
-    Kq, K = w.shape[0], x.shape[-1]
+    Kq, K = w.shape[-2], x.shape[-1]
     if Kq != K:
         if Kq < K or (Kq - K) >= qt.block:
             raise ValueError(
                 f"quantized contraction dim {Kq} incompatible with "
                 f"x's {K} (block {qt.block})")
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, Kq - K)])
+    if w.ndim > 2:
+        # stacked (per-client / per-layer) QTensor: contract pairwise
+        # along the shared leading axes — the serve plane's vmapped
+        # per-tenant slabs executed un-vmapped
+        lead = w.shape[:-2]
+        if x.shape[:len(lead)] != lead:
+            raise ValueError(
+                f"stacked quant_matmul needs matching lead dims: x "
+                f"{x.shape} vs dequant(qt) {w.shape}")
+        if x.ndim == w.ndim - 1:              # one row per stack entry
+            return (x[..., None, :] @ w)[..., 0, :]
+        return jnp.matmul(x, w)
     return jnp.einsum("...k,kn->...n", x, w)
+
+
+# ------------------------------------------------------------------
+# fused LoRA matmul (the QLoRA arm's whole linear layer)
+# ------------------------------------------------------------------
+def lora_matmul(x: jax.Array, w, a: jax.Array, b: jax.Array, *,
+                scale: float) -> jax.Array:
+    """``y = x @ W(+dequant) + scale·(x@A)@B`` with fp32 accumulation,
+    cast back to ``x.dtype`` — the parity oracle and CPU execution path
+    of the fused Pallas LoRA kernel (``kernels.lora_matmul``). ``w``
+    may be a :class:`~repro.core.quant.QTensor` (odd-K pad contract as
+    in :func:`quant_matmul`) or a dense matrix."""
+    xf = x.astype(jnp.float32)
+    if isinstance(w, qlib.QTensor):
+        base = quant_matmul(xf, w)
+    else:
+        base = jnp.einsum("...k,kn->...n", xf, w.astype(jnp.float32))
+    h = jnp.einsum("...k,kr->...r", xf, a.astype(jnp.float32))
+    delta = jnp.einsum("...r,rn->...n", h, b.astype(jnp.float32))
+    return (base + scale * delta).astype(x.dtype)
 
 
 # ------------------------------------------------------------------

@@ -49,8 +49,25 @@ def synthetic_token_stream(rng, vocab, n_clients, docs_per_client=64,
     return out
 
 
+def local_steps_for(n_docs: int, *, base_steps: int, batch: int,
+                    epochs: float = 0.0) -> int:
+    """Per-client local step count — the cohort engine's epoch
+    accounting (``Client.local_steps_for`` scales the configured steps
+    by the client's compute profile) applied to the LLM token stream:
+    ``epochs`` E > 0 sizes the round so the client covers its corpus E
+    times at this batch size, so a data-rich client runs (and is
+    *ledgered for*) proportionally more steps; E == 0 keeps the flat
+    ``base_steps``."""
+    if epochs <= 0:
+        return int(base_steps)
+    return max(1, -(-int(round(epochs * n_docs)) // int(batch)))
+
+
 def client_update(model, frozen, global_tr, data, *, steps, batch, lr,
                   comm_bits, seed):
+    """One client's local round; returns ``(delta, uplink_bytes, loss,
+    n_steps, n_samples)`` — the step/sample counts feed the round
+    ledger so multi-epoch local training is never under-counted."""
     rng = np.random.RandomState(seed)
     tr = global_tr
     opt = optim.adam_init(tr)
@@ -69,7 +86,7 @@ def client_update(model, frozen, global_tr, data, *, steps, batch, lr,
     if comm_bits:
         delta = quantize_tree(delta, bits=comm_bits, block=64,
                               min_size=256, skip_names=("slot",))
-    return delta, tree_bytes(delta), loss
+    return delta, tree_bytes(delta), loss, int(steps), int(steps * batch)
 
 
 def aggregate(global_tr, updates):
@@ -90,6 +107,10 @@ def main():
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--local-epochs", type=float, default=0.0,
+                    help="size each client's round to cover its corpus "
+                         "this many times (cohort-engine epoch "
+                         "accounting); 0 = flat --local-steps")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -125,27 +146,42 @@ def main():
         global_tr, _, start_round, _ = restore_fl_state(
             args.ckpt, like_trainable=global_tr)
         print(f"resumed from {args.ckpt} at round {start_round}")
+    total_steps = total_samples = total_uplink = 0
     for rnd in range(start_round, args.rounds):
         t0 = time.time()
         updates, losses, payload = [], [], 0
+        rnd_steps = rnd_samples = 0
         for c in range(args.clients):
-            d, nbytes, loss = client_update(
-                model, frozen, global_tr, data[c], steps=args.local_steps,
+            steps_c = local_steps_for(len(data[c]),
+                                      base_steps=args.local_steps,
+                                      batch=args.batch,
+                                      epochs=args.local_epochs)
+            d, nbytes, loss, n_steps, n_samples = client_update(
+                model, frozen, global_tr, data[c], steps=steps_c,
                 batch=args.batch, lr=args.lr, comm_bits=args.comm_bits,
                 seed=rnd * 100 + c)
             updates.append((len(data[c]), d))
             losses.append(loss)
             payload += nbytes
+            rnd_steps += n_steps
+            rnd_samples += n_samples
         global_tr = aggregate(global_tr, updates)
+        total_steps += rnd_steps
+        total_samples += rnd_samples
+        total_uplink += payload
         if args.ckpt:
             from repro.ckpt import save_fl_state
             save_fl_state(args.ckpt, round_idx=rnd + 1,
                           global_trainable=global_tr,
                           client_sizes=[len(d) for d in data])
+        epochs_covered = rnd_samples / max(1, sum(len(d) for d in data))
         print(f"round {rnd}: mean client loss={np.mean(losses):.4f} "
               f"uplink={payload/2**20:.2f}MiB "
+              f"local_steps={rnd_steps} epochs={epochs_covered:.2f} "
               f"({time.time()-t0:.1f}s)", flush=True)
-    print("done")
+    print(f"done: total_local_steps={total_steps} "
+          f"total_samples={total_samples} "
+          f"total_uplink={total_uplink/2**20:.2f}MiB")
 
 
 if __name__ == "__main__":

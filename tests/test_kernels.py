@@ -189,3 +189,272 @@ def test_decode_attention_partial_combine(rng):
     got = (acc / l[..., None]).reshape(B, 1, H, D)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------
+# fused LoRA matmul: one kernel == the einsum chain, forward + backward
+# ---------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import autotune, ops as kops
+from repro.kernels.lora_matmul import lora_matmul, quant_matmul_t
+
+
+def _lora_chain(x, qt, a, b, scale):
+    """The legacy einsum chain core.lora.linear used to build: base
+    quant matmul + separately-computed low-rank delta (fp32)."""
+    xf = x.astype(jnp.float32)
+    base = ref.quant_matmul(xf, qt)
+    h = jnp.einsum("...k,kr->...r", xf, a.astype(jnp.float32))
+    d = jnp.einsum("...r,rn->...n", h, b.astype(jnp.float32))
+    return (base + scale * d).astype(x.dtype)
+
+
+@pytest.mark.parametrize("bits,mode", [(8, "linear"), (4, "linear"),
+                                       (4, "nf4")])
+@pytest.mark.parametrize("K,N,r", [(128, 96, 4), (200, 64, 8),
+                                   (64, 33, 4)])   # 200: odd-K pad path
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_lora_kernel_vs_chain_forward(bits, mode, K, N, r, dtype,
+                                            rng):
+    M, scale = 17, 2.0
+    x = jnp.asarray(rng.randn(M, K), dtype)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    a = jnp.asarray(rng.randn(K, r) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.randn(r, N) * 0.1, jnp.float32)
+    qt = ref.blockwise_quant(w, bits=bits, block=128, mode=mode)
+    want = _lora_chain(x, qt, a, b, scale)
+    got = lora_matmul(x, qt, a, b, scale=scale, block_m=8, block_n=32,
+                      interpret=True)
+    assert got.dtype == x.dtype
+    tol = (1e-5 if dtype == jnp.float32 else 2e-2) * max(
+        1.0, float(jnp.abs(want.astype(jnp.float32)).max()))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("bits,mode", [(8, "linear"), (4, "nf4")])
+@pytest.mark.parametrize("K", [128, 200])          # 200: odd-K pad path
+def test_quant_matmul_t_vs_ref(bits, mode, K, rng):
+    N = 96
+    g = jnp.asarray(rng.randn(13, N), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    qt = ref.blockwise_quant(w, bits=bits, block=128, mode=mode)
+    wd = qlib.dequantize(qt, jnp.float32)           # (Kq, N)
+    want = g @ wd.T
+    got = quant_matmul_t(g, qt, block_m=8, block_n=32, interpret=True)
+    tol = 1e-5 * max(1.0, float(jnp.abs(want).max()))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol)
+
+
+@pytest.mark.parametrize("force", ["", "interpret"])
+@pytest.mark.parametrize("bits,mode,K", [(8, "linear", 128),
+                                         (4, "nf4", 200)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_lora_op_backward_vs_chain(force, bits, mode, K, dtype,
+                                         rng, monkeypatch):
+    """ops.lora_matmul's custom VJP (dx through Wᵀ + BᵀAᵀ, dA/dB through
+    the tiled gemms) == jax.grad of the einsum chain, on both the ref
+    path and the Pallas interpret path (which exercises
+    quant_matmul_t)."""
+    monkeypatch.setattr(kops, "_FORCE", force)
+    N, r, scale = 64, 4, 2.0
+    x = jnp.asarray(rng.randn(9, K), dtype)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    a = jnp.asarray(rng.randn(K, r) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.randn(r, N) * 0.1, jnp.float32)
+    qt = ref.blockwise_quant(w, bits=bits, block=128, mode=mode)
+    ct = jnp.asarray(rng.randn(9, N), jnp.float32)
+
+    def loss_fused(x, a, b):
+        y = kops.lora_matmul(x, qt, a, b, scale=scale)
+        return jnp.sum(y.astype(jnp.float32) * ct)
+
+    def loss_chain(x, a, b):
+        return jnp.sum(_lora_chain(x, qt, a, b, scale)
+                       .astype(jnp.float32) * ct)
+
+    y_f = kops.lora_matmul(x, qt, a, b, scale=scale)
+    y_c = _lora_chain(x, qt, a, b, scale)
+    ftol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(y_f, np.float32), np.asarray(y_c, np.float32),
+        atol=ftol * max(1.0, float(jnp.abs(y_c.astype(jnp.float32)).max())))
+    got = jax.grad(loss_fused, argnums=(0, 1, 2))(x, a, b)
+    want = jax.grad(loss_chain, argnums=(0, 1, 2))(x, a, b)
+    for gf, gc, name in zip(got, want, ("dx", "da", "db")):
+        assert gf.dtype == gc.dtype, name
+        scale_t = max(1.0, float(jnp.abs(gc.astype(jnp.float32)).max()))
+        tol = (1e-5 if gc.dtype == jnp.float32 else 2e-2) * scale_t
+        np.testing.assert_allclose(np.asarray(gf, np.float32),
+                                   np.asarray(gc, np.float32),
+                                   atol=tol, err_msg=name)
+
+
+def test_fused_lora_dense_w_grad_includes_dw(rng):
+    x = jnp.asarray(rng.randn(7, 32), jnp.float32)
+    w = jnp.asarray(rng.randn(32, 16), jnp.float32)
+    a = jnp.asarray(rng.randn(32, 4) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.randn(4, 16) * 0.1, jnp.float32)
+    ct = jnp.asarray(rng.randn(7, 16), jnp.float32)
+    gw = jax.grad(lambda w: jnp.sum(
+        kops.lora_matmul(x, w, a, b, scale=2.0) * ct))(w)
+    rw = jax.grad(lambda w: jnp.sum(
+        (x @ w + 2.0 * (x @ a) @ b) * ct))(w)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(M=st.integers(1, 24), K=st.sampled_from([64, 128, 150, 256]),
+       N=st.sampled_from([32, 64, 96]), r=st.sampled_from([2, 4, 8]),
+       bits=st.sampled_from([8, 4]),
+       scale=st.floats(0.25, 4.0))
+def test_fused_lora_property_fwd_bwd(M, K, N, r, bits, scale):
+    """Hypothesis sweep: fused op == chain, forward and backward, over
+    random geometry (incl. non-multiple K) on the ref path."""
+    rng = np.random.RandomState(M * 1000 + K + N + r + bits)
+    x = jnp.asarray(rng.randn(M, K), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    a = jnp.asarray(rng.randn(K, r) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.randn(r, N) * 0.1, jnp.float32)
+    qt = ref.blockwise_quant(w, bits=bits, block=128)
+    ct = jnp.asarray(rng.randn(M, N), jnp.float32)
+    y_f = kops.lora_matmul(x, qt, a, b, scale=scale)
+    y_c = _lora_chain(x, qt, a, b, scale)
+    s0 = max(1.0, float(jnp.abs(y_c).max()))
+    np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_c),
+                               atol=1e-5 * s0)
+    got = jax.grad(lambda x, a, b: jnp.sum(
+        kops.lora_matmul(x, qt, a, b, scale=scale) * ct),
+        argnums=(0, 1, 2))(x, a, b)
+    want = jax.grad(lambda x, a, b: jnp.sum(
+        _lora_chain(x, qt, a, b, scale) * ct),
+        argnums=(0, 1, 2))(x, a, b)
+    for gf, gc in zip(got, want):
+        s1 = max(1.0, float(jnp.abs(gc).max()))
+        np.testing.assert_allclose(np.asarray(gf), np.asarray(gc),
+                                   atol=2e-5 * s1)
+
+
+def test_quant_matmul_stacked_takes_pallas_when_forced(rng, monkeypatch):
+    """ops.quant_matmul must not silently fall back to ref for the
+    stacked (per-client serve) QTensor layout when Pallas is forced —
+    it vmaps the kernel over the stack axis, and loudly rejects layouts
+    it has no mapping for."""
+    monkeypatch.setattr(kops, "_FORCE", "interpret")
+    kops.reset_kernel_traces()
+    T, K, N = 3, 64, 32
+    w = jnp.asarray(rng.randn(T, K, N), jnp.float32)
+    qt = qlib.quantize(w, bits=8, block=64)
+    assert qt.q.ndim == 4
+    x = jnp.asarray(rng.randn(T, K), jnp.float32)
+    got = kops.quant_matmul(x, qt)
+    wd = qlib.dequantize(qt, jnp.float32)
+    want = (x[:, None, :] @ wd)[:, 0, :]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5 * max(1.0, float(jnp.abs(want).max())))
+    assert kops.KERNEL_TRACES.get("quant_matmul_pallas_stacked", 0) >= 1
+    assert kops.KERNEL_TRACES.get("quant_matmul_ref", 0) == 0
+    # batched rows per stack entry
+    xb = jnp.asarray(rng.randn(T, 5, K), jnp.float32)
+    got_b = kops.quant_matmul(xb, qt)
+    np.testing.assert_allclose(np.asarray(got_b), np.asarray(xb @ wd),
+                               atol=1e-4)
+    # no mapping for >1 stack axis: loud, not silent
+    w5 = jnp.asarray(rng.randn(2, 2, K, N), jnp.float32)
+    qt5 = qlib.quantize(w5, bits=8, block=64)
+    with pytest.raises(NotImplementedError):
+        kops.quant_matmul(jnp.asarray(rng.randn(2, 2, K), jnp.float32),
+                          qt5)
+
+
+# ---------------------------------------------------------------------
+# autotune: persisted winners, deterministic second sweep (zero compiles)
+# ---------------------------------------------------------------------
+def test_autotune_sweep_caches_and_charges(tmp_path, rng, monkeypatch):
+    from repro.fl import runtime as runtime_lib
+    path = str(tmp_path / "autotune.json")
+    autotune.clear()
+    rt = runtime_lib.ProgramRuntime()
+    x = jnp.asarray(rng.randn(16, 128), jnp.float32)
+    w = jnp.asarray(rng.randn(128, 64), jnp.float32)
+    qt = ref.blockwise_quant(w, bits=8, block=128)
+
+    def build(bm, bn):
+        return lambda: quant_matmul(x, qt, block_m=bm, block_n=bn,
+                                    interpret=True)
+
+    r1 = autotune.sweep("quant_matmul", build, 16, 128, 64, bits=8,
+                        mode="linear", runtime=rt, path=path,
+                        candidates=((8, 32), (16, 64)), iters=1)
+    assert r1.swept and r1.n_candidates == 2
+    assert rt.stats()["autotune_quant_matmul"]["n_compiles"] == 2
+    t1 = rt.compile_time_s
+    assert t1 > 0
+    # second sweep: pure cache hit — zero new compiles in the ledger
+    r2 = autotune.sweep("quant_matmul", build, 16, 128, 64, bits=8,
+                        mode="linear", runtime=rt, path=path,
+                        candidates=((8, 32), (16, 64)), iters=1)
+    assert not r2.swept and r2.best == r1.best
+    assert rt.stats()["autotune_quant_matmul"]["n_compiles"] == 2
+    assert rt.compile_time_s == t1
+    # lookup returns the winner without sweeping; M buckets to pow2
+    assert autotune.lookup("quant_matmul", 16, 128, 64, bits=8,
+                           mode="linear", path=path) == r1.best
+    assert autotune.lookup("quant_matmul", 13, 128, 64, bits=8,
+                           mode="linear", path=path) == r1.best
+    # unseen shape falls back to the default, still without sweeping
+    assert autotune.lookup("quant_matmul", 16, 256, 64, bits=8,
+                           mode="linear", path=path) == \
+        autotune.DEFAULT_BLOCKS
+    # a fresh in-process cache reloads the persisted JSON winners
+    autotune.clear()
+    assert autotune.lookup("quant_matmul", 16, 128, 64, bits=8,
+                           mode="linear", path=path) == r1.best
+    autotune.clear()
+
+
+# ---------------------------------------------------------------------
+# int8 quantized-compute GAN gemms
+# ---------------------------------------------------------------------
+def test_quant_gemm_int8_close_to_fp(rng):
+    from repro.kernels import gan_conv
+    x = jnp.asarray(rng.randn(37, 100), jnp.float32)
+    w = jnp.asarray(rng.randn(100, 24), jnp.float32)
+    y8 = gan_conv.quant_gemm_int8(x, w)
+    y = x @ w
+    rel = float(jnp.abs(y8 - y).max() / jnp.abs(y).max())
+    assert rel < 3e-2           # blockwise int8 compute, fp32 accum
+    # exact-zero blocks stay exact zeros
+    assert float(jnp.abs(gan_conv.quant_gemm_int8(
+        jnp.zeros((4, 64)), w[:64])).max()) == 0.0
+
+
+@pytest.mark.parametrize("op,hw,ci,co", [
+    ("conv", 16, 6, 12), ("conv", 8, 16, 24),
+    ("convT", 8, 16, 16), ("convT", 16, 16, 3),   # co<8: contrib form
+])
+def test_gan_conv_int8_close_to_fp_with_grads(op, hw, ci, co, rng):
+    from repro.kernels import gan_conv
+    x = jnp.asarray(rng.randn(2, hw, hw, ci), jnp.float32)
+    w = jnp.asarray(rng.randn(4, 4, ci, co) * 0.1, jnp.float32)
+    fp = getattr(gan_conv, f"{'conv' if op == 'conv' else 'convT'}4x4_s2")
+    q8 = getattr(gan_conv,
+                 f"{'conv' if op == 'conv' else 'convT'}4x4_s2_int8")
+    want = fp(x, w)
+    got = q8(x, w)
+    assert got.shape == want.shape
+    rel = float(jnp.abs(got - want).max() /
+                max(1e-6, float(jnp.abs(want).max())))
+    assert rel < 3e-2
+    ct = jnp.asarray(rng.randn(*want.shape), jnp.float32)
+    gx, gw = jax.grad(lambda x, w: jnp.sum(q8(x, w) * ct),
+                      argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(lambda x, w: jnp.sum(fp(x, w) * ct),
+                      argnums=(0, 1))(x, w)
+    for g, r_ in ((gx, rx), (gw, rw)):
+        assert bool(jnp.isfinite(g).all())
+        cos = float((g * r_).sum() /
+                    (jnp.linalg.norm(g) * jnp.linalg.norm(r_)))
+        assert cos > 0.99       # straight-through grads track the fp map

@@ -66,3 +66,42 @@ def test_adapter_prefill_decode_consistency(rng):
     got, _ = ad.decode(p, x[:, -1:], cache, jnp.asarray(S - 1), n_heads=h)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=2e-5)
+
+
+def test_lora_apply_bf16_params_accumulates_fp32(rng):
+    """Regression: ``apply`` promises f32 compute, but it used to run
+    the whole chain in ``lora["a"].dtype`` — with bf16 trainables the
+    accumulation silently happened in bf16. Pin the fp32-match
+    tolerance on the exact bf16-rounded factor values."""
+    K, N, r = 256, 64, 8
+    x = jnp.asarray(rng.randn(33, K), jnp.float32)
+    pair16 = {"a": jnp.asarray(rng.randn(K, r) * 0.1, jnp.bfloat16),
+              "b": jnp.asarray(rng.randn(r, N) * 0.1, jnp.bfloat16)}
+    # fp32 oracle ON the bf16-rounded values: isolates accumulation
+    # dtype from parameter rounding
+    a = pair16["a"].astype(jnp.float32)
+    b = pair16["b"].astype(jnp.float32)
+    want = (x @ a) @ b * (16.0 / r)
+    got = lora.apply(x, pair16, alpha=16.0, rank=r)
+    assert got.dtype == x.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5 * float(np.abs(want).max()))
+
+
+def test_lora_linear_fused_matches_chain_env(rng, monkeypatch):
+    """REPRO_LORA_FUSED=0 flips linear back to the einsum chain; both
+    routes agree to fp32 tolerance and the trace counters record which
+    one ran."""
+    from repro.kernels import ops as kops
+    w = jnp.asarray(rng.randn(64, 32), jnp.float32)
+    x = jnp.asarray(rng.randn(5, 64), jnp.float32)
+    pair = {"a": jnp.asarray(rng.randn(64, 4) * 0.1, jnp.float32),
+            "b": jnp.asarray(rng.randn(4, 32) * 0.1, jnp.float32)}
+    kops.reset_kernel_traces()
+    y_fused = lora.linear(x, w, pair, alpha=8.0, rank=4)
+    assert kops.KERNEL_TRACES.get("lora_linear_fused", 0) == 1
+    monkeypatch.setenv("REPRO_LORA_FUSED", "0")
+    y_chain = lora.linear(x, w, pair, alpha=8.0, rank=4)
+    assert kops.KERNEL_TRACES.get("lora_linear_chain", 0) == 1
+    np.testing.assert_allclose(np.asarray(y_fused), np.asarray(y_chain),
+                               atol=1e-5)

@@ -37,9 +37,10 @@ def test_federated_llm_round_on_assigned_arch():
     for rnd in range(2):
         updates = []
         for c in range(2):
-            d, _, loss = client_update(model, frozen, tr, data[c],
-                                       steps=8, batch=8, lr=5e-3,
-                                       comm_bits=8, seed=rnd * 10 + c)
+            d, _, loss, n_steps, n_samples = client_update(
+                model, frozen, tr, data[c], steps=8, batch=8, lr=5e-3,
+                comm_bits=8, seed=rnd * 10 + c)
+            assert n_steps == 8 and n_samples == 64  # round ledger feed
             updates.append((len(data[c]), d))
             losses.append(loss)
         tr = aggregate(tr, updates)
