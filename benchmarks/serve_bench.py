@@ -33,6 +33,14 @@ whereas a LoRA tenant's request runs the full per-user transformer
 tower whether batched or not, so mixed speedup is bounded by the
 family mix, not by the serving plane.
 
+A ``refresh_point`` exercises the trainer->store handoff mid-service:
+replay half the load, install a fresh trainables snapshot for every
+tenant (``AdapterStore.refresh`` — resident slots re-quantized in
+place, non-blocking), replay the rest, and check the refreshed plane
+still matches the sequential oracle on the *refreshed* backing —
+refresh is a latency event (its dispatch wall is recorded), never a
+correctness event.
+
 Writes ``BENCH_serve.json`` at the repo root. REPRO_BENCH_SCALE=quick
 (default) replays 128 requests over N in {8 mixed, 24}; =paper 512
 requests over N in {8 mixed, 24, 48}.
@@ -44,6 +52,7 @@ import os
 import pathlib
 import time
 
+import jax
 import numpy as np
 
 from repro.fl import serve as serve_lib
@@ -166,6 +175,54 @@ def bench_point(n_users: int, mixed: bool):
     }
 
 
+def refresh_point(n_users: int = 8):
+    """Mid-replay store refresh: serve, install new snapshots for every
+    tenant, keep serving — refreshed tenants must still match the
+    sequential oracle run on the refreshed backing."""
+    plane = serve_lib.demo_plane(
+        n_users, mixed=False, seed=0, quant_bits=8,
+        max_entries=max(MAX_BATCH, int(n_users * CACHE_FRAC)),
+        max_batch=MAX_BATCH)
+    store = plane["store"]
+    trace_a = serve_lib.zipf_request_trace(
+        n_users, N_REQUESTS // 2, seed=2, rate=RATE_MODERATE,
+        period=1.0, amplitude=0.5)
+    images_a = serve_lib.request_images(plane, trace_a, seed=2)
+    trace_b = serve_lib.zipf_request_trace(
+        n_users, N_REQUESTS // 2, seed=3, rate=RATE_MODERATE,
+        period=1.0, amplitude=0.5)
+    images_b = serve_lib.request_images(plane, trace_b, seed=3)
+
+    serve_lib.replay(plane["engine"], trace_a, images_a,
+                     collect_logits=False)     # warm + populate cache
+    n_res_before = len(store)
+    # new trainables snapshot for every tenant (same slab families)
+    updates = {uid: jax.tree.map(lambda l: l * 1.01 + 0.003, tree)
+               for uid, tree in store.backing.items()}
+    t0 = time.perf_counter()
+    n_rewritten = store.refresh(updates)
+    refresh_dispatch_s = time.perf_counter() - t0   # non-blocking wall
+    rec_b = serve_lib.replay(plane["engine"], trace_b, images_b)
+
+    reqs_b = [(int(u), im) for u, im in zip(trace_b.uid, images_b)]
+    seq_out = np.stack(engine_lib.serve_sequential(
+        plane["frozen"], plane["ccfg"], plane["class_emb"],
+        store.backing, reqs_b))
+    err = float(np.max(np.abs(rec_b["logits"] - seq_out)))
+    s = store.stats()
+    return {
+        "n_users": n_users,
+        "n_requests_each_half": N_REQUESTS // 2,
+        "resident_at_refresh": n_res_before,
+        "refreshes": s["refreshes"],
+        "refreshed_resident": n_rewritten,
+        "refresh_dispatch_s": refresh_dispatch_s,
+        "post_refresh_throughput_req_s": rec_b["throughput_wall"],
+        "post_refresh_hit_rate": rec_b["store"]["hit_rate"],
+        "max_abs_logit_err_after_refresh": err,
+    }
+
+
 def main():
     points = []
     for n, mixed in POINTS:
@@ -180,8 +237,14 @@ def main():
               f"speedup={p['speedup']:.2f}x "
               f"hit_rate={p['batched']['hit_rate']:.2f} "
               f"err={p['max_abs_logit_err']:.2e}")
+    rp = refresh_point()
+    print(f"refresh N={rp['n_users']:3d} resident={rp['resident_at_refresh']} "
+          f"rewritten={rp['refreshed_resident']} "
+          f"dispatch={rp['refresh_dispatch_s']*1e3:.1f} ms "
+          f"err={rp['max_abs_logit_err_after_refresh']:.2e}")
+    assert rp["refreshed_resident"] == rp["resident_at_refresh"]
     out = {"scale": _SCALE, "n_requests": N_REQUESTS,
-           "points": points}
+           "points": points, "refresh_point": rp}
     path = ROOT / "BENCH_serve.json"
     path.write_text(json.dumps(out, indent=1))
     print(f"wrote {path}")

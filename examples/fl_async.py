@@ -94,6 +94,19 @@ def main():
         kinds = ", ".join(f"{k}: {v}" for k, v in
                           h.meta["n_compiles_by_kind"].items())
         print(f"  {name:15s} {kinds}")
+    # the pipelined round loop's overlap ledger: how many times each
+    # policy's loop blocked the host per round (0 = fully overlapped
+    # steady state), which events synced, and how many rounds had their
+    # selection pre-drawn before the loop started
+    print("\npipeline overlap/sync ledger (meta['sync_counts']):")
+    for name, h in hists.items():
+        counts = ", ".join(f"{k}: {v}" for k, v in
+                           sorted(h.meta["sync_counts"].items()))
+        print(f"  {name:15s} mode={h.meta['pipeline']} "
+              f"syncs/round={h.meta['syncs_per_round']:.2f} "
+              f"prepared={h.meta['prepared_rounds']} "
+              f"loop_wall={h.meta['loop_wall_s']:.2f}s  "
+              f"[{counts or 'no syncs'}]")
     async_h = hists["async-buffered"]
     print(f"\nasync virtual timeline: commits at "
           f"{['%.1f' % t for t in async_h.vtime]}")

@@ -2,7 +2,8 @@
 # Tier-1 gate: full unit suite, then 2-round smoke runs through the
 # public simulator entry point — full-sync cohort engine with fleet-GAN
 # rebalancing, plus the sync-partial and async-buffered scheduler
-# policies (fl.sched).
+# policies (fl.sched) and the pipelined round loop (sync-free steady
+# state, bitwise History parity, zero new compiles vs barrier).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -64,6 +65,37 @@ assert h2.meta["n_compiles_by_kind"]["subset_round"] == 1, \
 print("sync-partial smoke run OK:",
       {"participation": h.participation,
        "n_compiles_by_kind": h2.meta["n_compiles_by_kind"]})
+
+# pipeline smoke: the pipelined round loop must not degenerate to the
+# serial path (zero host syncs per steady-state round — the trace
+# counter catches a reintroduced per-round float()/block_until_ready),
+# must produce bitwise the barrier History, and — sharing the runtime
+# above — must add ZERO new program kinds or compiles vs barrier
+pbase = dict(base, clients_per_round=2, rounds=3, eval_every=1)
+hb = run_federated(FLConfig(**pbase, pipeline="barrier"), runtime=rt)
+compiles_after_barrier = rt.n_compiles
+hp = run_federated(FLConfig(**pbase, pipeline="pipelined"), runtime=rt)
+assert hp.meta["pipeline"] == "pipelined"
+assert hp.meta["loop_syncs"] == 0 and hp.meta["syncs_per_round"] == 0, \
+    ("pipelined loop degenerated to serial (host syncs per round)",
+     hp.meta["sync_counts"])
+assert hp.meta["prepared_rounds"] == pbase["rounds"]
+for f in ("rounds", "server_acc", "server_loss", "tail_acc",
+          "client_loss", "client_acc", "uplink_bytes", "participation",
+          "staleness", "vtime", "class_counts", "class_acc"):
+    assert getattr(hb, f) == getattr(hp, f), \
+        ("pipelined History diverged from the barrier oracle", f)
+assert rt.n_compiles == compiles_after_barrier, \
+    ("pipelined loop compiled new programs vs barrier",
+     compiles_after_barrier, rt.n_compiles)
+assert set(hp.meta["n_compiles_by_kind"]) == \
+    set(hb.meta["n_compiles_by_kind"]), \
+    (hb.meta["n_compiles_by_kind"], hp.meta["n_compiles_by_kind"])
+print("pipeline smoke OK:",
+      {"syncs_per_round": hp.meta["syncs_per_round"],
+       "sync_counts": hp.meta["sync_counts"],
+       "barrier_sync_counts": hb.meta["sync_counts"],
+       "loop_wall_s": round(hp.meta["loop_wall_s"], 3)})
 
 h = run_federated(FLConfig(
     dataset="pacs", strategy="fedclip", n_clients=4, rounds=2,

@@ -411,9 +411,9 @@ class CohortEngine:
             return lambda k, l: sample_batch_indices(k, l, steps, batch)
 
         args = (key, lens)
-        return self.runtime.compile(
+        return self.runtime.run(
             "sample_idx", build, args,
-            static_key=(steps, batch))(*args)
+            static_key=(steps, batch))
 
     # -- uplink accounting --------------------------------------------
     def per_client_uplink_bytes(self, global_tr) -> int:
@@ -648,15 +648,19 @@ class CohortEngine:
             sel_dev, n_steps, idx = (self._put(sel_dev),
                                      self._put(n_steps), self._put(idx))
             global_tr = self._canon_global(global_tr)
+        uplink = K * self.per_client_uplink_bytes(global_tr)
         args = (global_tr, sel_dev, n_steps, idx, self.pool_staged,
                 self.pool_labs, weights, self.frozen, self.class_emb)
-        new_tr, loss, acc = self.runtime.compile(
+        new_tr, loss, acc = self.runtime.run(
             "subset_round", self._build_subset_round, args,
             static_key=self._static_key,
-            donate_argnums=self._donate())(*args)
+            donate_argnums=self._donate())
+        # metrics stay device-resident (sliced to the true K in-graph):
+        # the caller decides when to materialize — the pipelined round
+        # loop defers them to its bulk ring flush
         return new_tr, {
-            "loss": np.asarray(loss)[:K], "acc": np.asarray(acc)[:K],
-            "uplink_bytes": K * self.per_client_uplink_bytes(global_tr),
+            "loss": loss[:K], "acc": acc[:K],
+            "uplink_bytes": uplink,
             "sel": sel}
 
     def run_wave(self, global_tr, sel, key, n_steps=None):
@@ -679,11 +683,11 @@ class CohortEngine:
             global_tr = self._canon_global(global_tr)
         args = (global_tr, sel_dev, n_steps, idx, self.pool_staged,
                 self.pool_labs, self.frozen, self.class_emb)
-        delta, loss, acc = self.runtime.compile(
+        delta, loss, acc = self.runtime.run(
             "wave_round", self._build_wave, args,
-            static_key=self._static_key)(*args)
+            static_key=self._static_key)
         return delta, {
-            "loss": np.asarray(loss)[:K], "acc": np.asarray(acc)[:K],
+            "loss": loss[:K], "acc": acc[:K],
             "uplink_bytes": K * self.per_client_uplink_bytes(global_tr),
             "sel": sel}
 
@@ -704,10 +708,9 @@ class CohortEngine:
             global_tr = self._canon_global(global_tr)
         args = (global_tr, idx, self.pool_staged, self.pool_labs,
                 self.weights, self.frozen, self.class_emb)
-        new_tr, loss, acc = self.runtime.compile(
+        new_tr, loss, acc = self.runtime.run(
             "full_round", self._build_round, args,
             static_key=self._static_key,
-            donate_argnums=self._donate())(*args)
-        return new_tr, {"loss": np.asarray(loss),
-                        "acc": np.asarray(acc),
+            donate_argnums=self._donate())
+        return new_tr, {"loss": loss, "acc": acc,
                         "uplink_bytes": uplink}

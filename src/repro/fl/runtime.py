@@ -50,16 +50,46 @@ stages other work; ``Handle.result()`` blocks and materializes. The
 fleet-GAN synthesis dispatch uses this directly, and
 ``fleetgan.FleetGANJob`` (launch/resolve) is the engine-level form of
 the same pattern: the simulator launches GAN prep, the cohort engine
-stages the CLIP pools while those programs run, then resolves.
+stages the CLIP pools while those programs run, then resolves. Since
+the pipelined round loop (PR 10) the handle is dependency-tracked:
+``dispatch()`` accepts other handles as arguments (their outputs are
+consumed without materializing), and a dispatch that *donates* buffers
+registers a donation hazard on them — any later runtime call consuming
+a donated-in-flight buffer raises loudly instead of reading freed
+memory, until the donating handle materializes (after which JAX's own
+deleted-array error still fires).
+
+**Host-sync tracing.** Every intentional materialization point in the
+stack — ``Handle.result()``, ``ProgramRuntime.sync()``, the
+simulator's metric-ring flushes — counts into the module-level
+``SYNC_TRACES`` ledger (the ``KERNEL_TRACES`` pattern), so tests and
+the CI smoke can assert a pipelined steady-state round performs zero
+host syncs rather than silently degenerating to the serial loop.
 """
 from __future__ import annotations
 
 import time
+import weakref
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+# Host-sync trace ledger (the KERNEL_TRACES pattern from kernels.ops):
+# counts *intentional materialization points* by tag, incremented at
+# the moment the host blocks on device results. Pipelined-mode tests
+# reset it, run R rounds, and assert the steady-state tags stayed 0.
+SYNC_TRACES: Dict[str, int] = {}
+
+
+def sync_count(tag: str, n: int = 1) -> None:
+    """Charge ``n`` host-sync events to ``tag`` in ``SYNC_TRACES``."""
+    SYNC_TRACES[tag] = SYNC_TRACES.get(tag, 0) + int(n)
+
+
+def reset_sync_traces() -> None:
+    SYNC_TRACES.clear()
 
 # Cohort-width buckets below this floor are not worth separate programs:
 # a width-4 program over a width-2 selection wastes two masked rows of a
@@ -133,16 +163,45 @@ def pad_leading(arr, width: int, fill=0):
 
 
 class Handle:
-    """Non-blocking view of a dispatched program's outputs. The wrapped
-    arrays are live as soon as the dispatch returns (JAX async dispatch);
-    ``result()`` blocks until the computation finishes and returns the
-    output tree. Purely structural on synchronous backends (CPU)."""
+    """Dependency-tracked, non-blocking view of a dispatched program's
+    outputs. The wrapped arrays are live as soon as the dispatch returns
+    (JAX async dispatch); ``result()`` blocks until the computation
+    finishes, counts the sync in ``SYNC_TRACES`` (tags ``handle_wait``
+    and ``handle_wait:<kind>``), clears any donation hazards this
+    dispatch registered, and returns the output tree.
 
-    def __init__(self, out):
+    ``deps`` records the handles whose outputs fed this dispatch
+    (``ProgramRuntime.dispatch`` unwraps handle arguments), so a
+    pipeline's dataflow is inspectable without materializing anything.
+    A handle whose dispatch *donated* input buffers blocks reuse of
+    those buffers — the owning runtime raises on any later call that
+    consumes them — until ``result()`` materializes the outputs."""
+
+    __slots__ = ("kind", "deps", "_out", "_done", "_runtime",
+                 "_hazard_ids")
+
+    def __init__(self, out, *, kind: str = "anon", deps: Tuple = (),
+                 runtime=None, hazard_ids: Tuple[int, ...] = ()):
+        self.kind = kind
+        self.deps = tuple(deps)
         self._out = out
+        self._done = False
+        self._runtime = runtime
+        self._hazard_ids = tuple(hazard_ids)
+
+    @property
+    def done(self) -> bool:
+        """True once ``result()`` has materialized the outputs."""
+        return self._done
 
     def result(self):
-        jax.block_until_ready(jax.tree.leaves(self._out))
+        if not self._done:
+            sync_count("handle_wait")
+            sync_count(f"handle_wait:{self.kind}")
+            jax.block_until_ready(jax.tree.leaves(self._out))
+            self._done = True
+            if self._runtime is not None and self._hazard_ids:
+                self._runtime._clear_hazards(self._hazard_ids)
         return self._out
 
     @property
@@ -176,6 +235,11 @@ class ProgramRuntime:
         self.max_entries = int(max_entries)
         self._exes: "OrderedDict[Tuple, Any]" = OrderedDict()
         self._kinds: Dict[str, Dict[str, float]] = {}
+        # donation hazards: id(leaf) -> (weakref to the donated leaf,
+        # donating program kind). Registered by dispatch() on donated
+        # argument leaves, cleared when the donating handle materializes
+        # or the leaf is garbage-collected (dead refs are pruned lazily).
+        self._hazards: Dict[int, Tuple[Any, str]] = {}
 
     # -- cache ---------------------------------------------------------
     @staticmethod
@@ -244,9 +308,49 @@ class ProgramRuntime:
             self._exes.move_to_end(key)
         return exe
 
+    # -- donation hazards ----------------------------------------------
+    def _prune_hazards(self) -> None:
+        dead = [i for i, (ref, _) in self._hazards.items()
+                if ref() is None]
+        for i in dead:
+            del self._hazards[i]
+
+    def _clear_hazards(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            self._hazards.pop(i, None)
+
+    def _check_hazards(self, args, kind: str) -> None:
+        """Raise loudly if any argument leaf was donated by a dispatch
+        that has not materialized yet — consuming it would read a buffer
+        the backend may already have aliased for the donor's outputs."""
+        if not self._hazards:
+            return
+        for leaf in jax.tree.leaves(args):
+            ent = self._hazards.get(id(leaf))
+            if ent is not None and ent[0]() is leaf:
+                raise RuntimeError(
+                    f"donation hazard: program {kind!r} consumes a "
+                    f"buffer donated to in-flight program {ent[1]!r}; "
+                    "materialize that handle (Handle.result()) before "
+                    "reusing its donated inputs")
+
+    def _register_hazards(self, args, donate, kind: str):
+        ids = []
+        for i in donate:
+            for leaf in jax.tree.leaves(args[i]):
+                try:
+                    ref = weakref.ref(leaf)
+                except TypeError:
+                    continue
+                self._hazards[id(leaf)] = (ref, kind)
+                ids.append(id(leaf))
+        return tuple(ids)
+
     def run(self, kind: str, build, args, **kw):
-        """Compile-or-hit, then execute synchronously-dispatched."""
-        return self.compile(kind, build, args, **kw)(*args)
+        """Compile-or-hit, then execute without forcing a host sync —
+        the handle-free form of ``dispatch`` (same hazard checks and
+        donation tracking), returning the raw output tree."""
+        return self.dispatch(kind, build, args, **kw).out
 
     def count(self, kind: str, counter: str, n: int = 1) -> None:
         """Charge ``n`` to an auxiliary per-kind counter in the same
@@ -270,8 +374,35 @@ class ProgramRuntime:
         k["compile_time_s"] += float(seconds)
 
     def dispatch(self, kind: str, build, args, **kw) -> Handle:
-        """Compile-or-hit, then execute without forcing a host sync."""
-        return Handle(self.compile(kind, build, args, **kw)(*args))
+        """Compile-or-hit, then execute without forcing a host sync,
+        returning a dependency-tracked :class:`Handle`. Top-level
+        positional arguments may themselves be handles — their output
+        trees are consumed in place (no materialization) and recorded
+        as dependencies. Donated argument buffers are registered as
+        hazards until the returned handle materializes."""
+        deps = tuple(a for a in args if isinstance(a, Handle))
+        if deps:
+            args = tuple(a.out if isinstance(a, Handle) else a
+                         for a in args)
+        self._prune_hazards()
+        self._check_hazards(args, kind)
+        out = self.compile(kind, build, args, **kw)(*args)
+        donate = tuple(kw.get("donate_argnums", ()))
+        hazard_ids = self._register_hazards(args, donate, kind) \
+            if donate else ()
+        return Handle(out, kind=kind, deps=deps, runtime=self,
+                      hazard_ids=hazard_ids)
+
+    def sync(self, tree, tag: str = "sync"):
+        """Materialize a pytree of device arrays in bulk, charging one
+        host-sync event to ``tag`` — the counted form every deliberate
+        blocking point in the pipelined loop goes through. Non-array
+        leaves pass through untouched."""
+        sync_count(tag)
+        jax.block_until_ready([
+            l for l in jax.tree.leaves(tree)
+            if hasattr(l, "block_until_ready")])
+        return tree
 
     def clear(self):
         """Drop every cached executable and reset the accounting — used

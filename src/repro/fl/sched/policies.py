@@ -248,6 +248,14 @@ class Scheduler:
         # sync virtual clock under chaos: a barrier round lasts as long
         # as its slowest (straggler-stretched) participant
         self._vt = 0.0
+        # pre-drawn selections (pipelined mode): rnd -> Cohort. The
+        # selection draw materializes a tiny jax.random program, and a
+        # host sync on *any* program drains the whole in-flight device
+        # queue — so the pipelined loop hoists every stateless draw to
+        # before the first round dispatch (prepare_rounds), keeping the
+        # steady state sync-free. Draws are bitwise the inline ones
+        # (same keys, same ops, just evaluated early).
+        self._presel: Dict[int, Cohort] = {}
 
     # -- helpers ------------------------------------------------------
     def _cohort_for(self, sel, staleness=None) -> Cohort:
@@ -283,6 +291,14 @@ class Scheduler:
     def select(self, rnd: int, key) -> Cohort:
         raise NotImplementedError
 
+    def prepare_rounds(self, round_keys) -> int:
+        """Pre-draw the selection cohorts for ``round_keys`` (a list of
+        ``(rnd, key)`` pairs) so the round loop never syncs on a
+        selection draw. Only stateless policies can pre-draw — the base
+        (and every stateful/chaotic policy) declines by returning 0;
+        their rounds sync inline exactly as before."""
+        return 0
+
     def commit(self, global_tr, updates, round_tag):
         """Land updates. Sync policies aggregate inside the fused round
         dispatch, so their commit is pure bookkeeping (identity)."""
@@ -316,6 +332,19 @@ class SyncPartialScheduler(Scheduler):
     name = "sync-partial"
 
     def select(self, rnd: int, key) -> Cohort:
+        pre = self._presel.pop(rnd, None)
+        return pre if pre is not None else self._select_now(rnd, key)
+
+    def prepare_rounds(self, round_keys) -> int:
+        if self.chaos is not None:
+            # chaos selection depends on the retry queue — stateful,
+            # cannot be drawn ahead of the rounds that feed it
+            return 0
+        for rnd, key in round_keys:
+            self._presel[rnd] = self._select_now(rnd, key)
+        return len(round_keys)
+
+    def _select_now(self, rnd: int, key) -> Cohort:
         ksel = jax.random.fold_in(key, _SEL_TAG)
         if self.chaos is None:
             return self._cohort_for(self._draw_clients(ksel, self.k,
@@ -447,7 +476,7 @@ class FullSyncScheduler(SyncPartialScheduler):
                          local_steps=local_steps, clients_per_round=0,
                          chaos=chaos)
 
-    def select(self, rnd: int, key) -> Cohort:
+    def _select_now(self, rnd: int, key) -> Cohort:
         if self.chaos is None:
             return self._cohort_for(np.arange(self.n, dtype=np.int32))
         # chaos full-sync: everyone reachable (dark windows shrink the
@@ -570,9 +599,13 @@ class AsyncBufferedScheduler(Scheduler):
         for j, ci in enumerate(cohort.sel):
             ci = int(ci)
             self.queue.push(self.queue.now + float(durations[j]), ci)
+            # loss/acc stay device scalars — materializing one here
+            # would drain the whole in-flight queue (CPU backend) and
+            # serialize the pipelined loop; History's float conversion
+            # happens at the simulator's bulk ring flush
             self._inflight[ci] = {
                 "delta": deltas[j], "base_version": self.version,
-                "loss": float(m["loss"][j]), "acc": float(m["acc"][j]),
+                "loss": m["loss"][j], "acc": m["acc"][j],
                 "bytes": m["uplink_bytes"] // cohort.k,
                 "scale": float(scale[j]), "tag": tag}
 
@@ -717,9 +750,11 @@ class AsyncBufferedScheduler(Scheduler):
         # fault-free); uplink bytes count every delivery attempt of the
         # flushed entries — lost sends consumed real uplink
         logged = self._committed if self.chaos is not None else entries
+        # loss/acc are lists of device scalars (see _dispatch): the
+        # simulator materializes them at its ring flush, not per round
         m = {
-            "loss": np.asarray([e["loss"] for e in logged]),
-            "acc": np.asarray([e["acc"] for e in logged]),
+            "loss": [e["loss"] for e in logged],
+            "acc": [e["acc"] for e in logged],
             "uplink_bytes": int(sum(
                 e["bytes"] * (1 + e.get("attempts", 0))
                 for e in entries)),

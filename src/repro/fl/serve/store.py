@@ -174,6 +174,9 @@ class AdapterStore:
         # uid -> (family key, slot); OrderedDict order IS the LRU order
         self._res: "OrderedDict[int, Tuple[Tuple, int]]" = OrderedDict()
         self._fams: Dict[Tuple, Dict[str, Any]] = {}
+        # last global snapshot seen by refresh_from_global (a device
+        # copy — the trainer's own buffers get donated round-to-round)
+        self._base = None
 
     # -- residency -----------------------------------------------------
     def __len__(self) -> int:
@@ -224,12 +227,70 @@ class AdapterStore:
         program gathers from) and ``use_lora``."""
         return self._fams[famk]
 
+    # -- refresh (trainer -> store handoff) ----------------------------
+    def refresh(self, updates: Mapping[int, Any]) -> int:
+        """Install new trainable snapshots for ``updates``' uids: the
+        backing map always updates; a *resident* uid additionally gets
+        its slab slot rewritten in place through the same deterministic
+        ``quantize_at_rest`` path a miss takes — a refreshed resident
+        and an evicted-then-refetched user hold bitwise the same slab
+        rows. Residency, slot assignment, and LRU order are untouched:
+        refresh is a latency event, never a correctness event. All
+        device work is non-blocking (quantize + ``.at[slot].set``
+        dispatches), so a mid-round refresh overlaps the next round's
+        train dispatch. Returns the number of resident slots rewritten;
+        charges ``refreshes``/``refreshed_resident`` to the runtime
+        ledger."""
+        if not isinstance(self.backing, dict):
+            self.backing = dict(self.backing)
+        n_res = 0
+        for uid, tree in updates.items():
+            uid = int(uid)
+            self.backing[uid] = tree
+            ent = self._res.get(uid)
+            if ent is None:
+                continue
+            famk, slot = ent
+            qtree = quantize_at_rest(
+                jax.tree.map(jnp.asarray, tree), bits=self.quant_bits)
+            if _family_key(qtree) != famk:
+                raise ValueError(
+                    f"refresh for uid {uid} changes its slab family "
+                    "(tree structure / leaf geometry must be stable)")
+            fam = self._fams[famk]
+            fam["slabs"] = _slab_set(fam["slabs"], slot, qtree)
+            n_res += 1
+        self.runtime.count(STORE_KIND, "refreshes", len(updates))
+        self.runtime.count(STORE_KIND, "refreshed_resident", n_res)
+        return n_res
+
+    def refresh_from_global(self, new_global) -> int:
+        """Continuous trainer->store refresh: rebase every backed user
+        by the global model's movement since the last refresh,
+        ``new_i = old_i + (new_global - base)``, preserving each user's
+        personalization delta. ``new_global`` is snapshotted as a device
+        copy immediately (the trainer donates its global buffers into
+        the next round's dispatch, so holding a reference would read
+        freed memory); the first call just records the snapshot and
+        refreshes nothing."""
+        snap = jax.tree.map(jnp.copy, new_global)
+        base, self._base = self._base, snap
+        if base is None:
+            return 0
+        updates = {
+            uid: jax.tree.map(lambda o, nw, b: o + (nw - b),
+                              tree, snap, base)
+            for uid, tree in self.backing.items()}
+        return self.refresh(updates)
+
     # -- accounting ----------------------------------------------------
     def stats(self) -> Dict[str, int]:
         k = self.runtime.stats().get(STORE_KIND, {})
         return {"hits": int(k.get("hits", 0)),
                 "misses": int(k.get("misses", 0)),
                 "evictions": int(k.get("evictions", 0)),
+                "refreshes": int(k.get("refreshes", 0)),
+                "refreshed_resident": int(k.get("refreshed_resident", 0)),
                 "resident": len(self._res),
                 "families": len(self._fams)}
 

@@ -89,6 +89,17 @@ class FLConfig:
     # LRU bound on the shared program runtime's executable cache
     # (0 = unbounded); only used when no runtime= is passed in
     runtime_cache_entries: int = 0
+    # round-loop execution mode: "pipelined" overlaps round r's server
+    # eval, metric materialization, and serve-store refresh with round
+    # r+1's selection/dispatch (selection draws hoisted, metrics landing
+    # in a device-side ring materialized in bulk); "barrier" keeps the
+    # serial loop — every round materialized before the next dispatch —
+    # as the parity oracle. History values are bitwise identical.
+    pipeline: str = "pipelined"
+    # pipelined: bulk-materialize the metric ring every M rounds
+    # (0 = only at run end). Each mid-run flush is one counted host
+    # sync; the default keeps the steady state completely sync-free.
+    metrics_flush_every: int = 0
 
 
 @dataclass
@@ -193,13 +204,11 @@ def _eval_stats(frozen, trainable, ccfg, class_emb, imgs, labs, mask):
     return acc, loss, tail_hit, tail_n
 
 
-def _server_eval(frozen, trainable, ccfg, class_emb, eval_set,
-                 batch=128, runtime=None):
-    """Server-side eval through the shared program runtime (kind
-    ``server_eval``) so ``History.meta`` ledgers cover the eval program
-    like every other fused program; a ``runtime=None`` call (standalone
-    scripts) still compiles, it just discards the accounting."""
-    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime()
+def _eval_pack(eval_set, batch=128):
+    """Stage the eval set once as fixed-shape device tensors
+    ``(n_batches, batch, ...)`` with a validity mask — the round loop's
+    eval dispatches reuse them instead of re-padding and re-uploading
+    per eval round. Returns ``(imgs, labs, mask, n_true)``."""
     imgs, labs = eval_set["images"], eval_set["labels"]
     n = len(labs)
     nb = -(-n // batch)
@@ -209,23 +218,60 @@ def _server_eval(frozen, trainable, ccfg, class_emb, eval_set,
     labs_p = np.concatenate([labs, np.zeros((pad,), labs.dtype)])
     mask = np.concatenate([np.ones(n, np.float32), np.zeros(pad,
                                                             np.float32)])
-    args = (frozen, trainable, class_emb,
-            jnp.asarray(imgs_p.reshape(nb, batch, *imgs.shape[1:])),
+    return (jnp.asarray(imgs_p.reshape(nb, batch, *imgs.shape[1:])),
             jnp.asarray(labs_p.reshape(nb, batch)),
-            jnp.asarray(mask.reshape(nb, batch)))
+            jnp.asarray(mask.reshape(nb, batch)), n)
+
+
+def _eval_dispatch(frozen, trainable, ccfg, class_emb, pack, runtime):
+    """Non-blocking server-eval dispatch (kind ``server_eval``): returns
+    a runtime Handle over the summed device statistics. The pipelined
+    loop dispatches this right after the round program — before the next
+    round's dispatch donates ``trainable`` — and materializes the
+    handle at the ring flush."""
+    args = (frozen, trainable, class_emb, pack[0], pack[1], pack[2])
 
     def build():
         return lambda fz, tr, ce, im, lb, mk: _eval_stats(
             fz, tr, ccfg, ce, im, lb, mk)
 
-    acc, loss, tail_hit, tail_n = rt.compile(
-        "server_eval", build, args, static_key=(ccfg,))(*args)
+    return runtime.dispatch("server_eval", build, args,
+                            static_key=(ccfg,))
+
+
+def _eval_finalize(ev_out, n: int):
+    """Normalize summed eval statistics into (acc, loss, tail_acc) —
+    the one place the eval floats materialize, shared by both pipeline
+    modes so deferred values stay bitwise the barrier ones."""
+    acc, loss, tail_hit, tail_n = ev_out
     return (float(acc) / n, float(loss) / n,
             float(tail_hit) / max(float(tail_n), 1.0))
 
 
-def run_federated(cfg: FLConfig, *, runtime=None) -> History:
+def _server_eval(frozen, trainable, ccfg, class_emb, eval_set,
+                 batch=128, runtime=None):
+    """Blocking server-side eval through the shared program runtime
+    (kind ``server_eval``) so ``History.meta`` ledgers cover the eval
+    program like every other fused program; a ``runtime=None`` call
+    (standalone scripts) still compiles, it just discards the
+    accounting."""
+    rt = runtime if runtime is not None else runtime_lib.ProgramRuntime()
+    pack = _eval_pack(eval_set, batch)
+    h = _eval_dispatch(frozen, trainable, ccfg, class_emb, pack, rt)
+    return _eval_finalize(h.out, pack[3])
+
+
+def run_federated(cfg: FLConfig, *, runtime=None,
+                  serve_store=None) -> History:
+    """Run the federated simulation. ``serve_store`` optionally wires a
+    :class:`repro.fl.serve.store.AdapterStore` into the round loop: each
+    committed round rebase-refreshes the store from the new global
+    (``AdapterStore.refresh_from_global`` — quantize + slab write for
+    residents), dispatched non-blocking so in pipelined mode the refresh
+    of round r overlaps round r+1's train dispatch."""
     strat = STRATEGIES[cfg.strategy]
+    if cfg.pipeline not in ("pipelined", "barrier"):
+        raise ValueError(f"unknown pipeline mode {cfg.pipeline!r}")
     rng = jax.random.PRNGKey(cfg.seed)
     data = make_dataset(cfg.dataset, n_per_class=cfg.n_per_class,
                         seed=cfg.seed, longtail_gamma=cfg.longtail_gamma)
@@ -435,10 +481,13 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
     cids = np.asarray([c.cid for c in clients])
     n_dc = int(trace.n_device_classes)
     dclass = np.asarray(trace.device_class, np.int64)
-    for rnd in range(cfg.rounds):
-        t0 = time.time()
-        key = jax.random.fold_in(jax.random.fold_in(rng, 3), rnd)
-        global_tr, m = sched.step(global_tr, rnd, key)
+    pipelined = cfg.pipeline == "pipelined"
+    hist.meta["pipeline"] = cfg.pipeline
+
+    def _record_round(m):
+        # History row assembly — one code path for both pipeline modes,
+        # so deferred (device-resident) metrics produce bitwise the
+        # barrier values, just fetched late
         hist.uplink_bytes.append(int(m["uplink_bytes"]))
         hist.client_loss.append([float(v) for v in m["loss"]])
         hist.client_acc.append([float(v) for v in m["acc"]])
@@ -461,18 +510,93 @@ def run_federated(cfg: FLConfig, *, runtime=None) -> History:
         hist.class_counts.append(counts)
         hist.class_staleness.append(c_stal)
         hist.class_acc.append(c_acc)
-        hist.round_time_s.append(time.time() - t0)
-        # measured footprint constant (Fig. 3) — deterministic, no
-        # synthetic wiggle
-        hist.util_proxy.append(hist.meta["util_proxy_const"])
-        if rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
-            acc, loss, tail = _server_eval(frozen, global_tr, ccfg,
-                                           class_emb, eval_set,
-                                           runtime=rt)
-            hist.rounds.append(rnd)
-            hist.server_acc.append(acc)
-            hist.server_loss.append(loss)
-            hist.tail_acc.append(tail)
+
+    def _record_eval(rnd, ev_out):
+        acc, loss, tail = _eval_finalize(ev_out, ev_pack[3])
+        hist.rounds.append(rnd)
+        hist.server_acc.append(acc)
+        hist.server_loss.append(loss)
+        hist.tail_acc.append(tail)
+
+    # eval tensors staged once; the per-round key sequence is a pure
+    # function of the run seed, so it is precomputed and (pipelined
+    # mode) handed to the policy to pre-draw its selection cohorts —
+    # steady-state rounds then never sync on a selection draw
+    ev_pack = _eval_pack(eval_set)
+    base_key = jax.random.fold_in(rng, 3)
+    round_keys = [(r, jax.random.fold_in(base_key, r))
+                  for r in range(cfg.rounds)]
+    prepared = sched.prepare_rounds(round_keys) if pipelined else 0
+
+    # pipelined: per-round metrics (device scalars), the non-blocking
+    # eval handle, and the dispatch wall land in a ring, bulk-
+    # materialized every metrics_flush_every rounds or at run end
+    ring: List[Dict] = []
+    loop_syncs = 0
+
+    def _flush_ring():
+        if not ring:
+            return
+        rt.sync([(e["m"]["loss"], e["m"]["acc"],
+                  None if e["eval"] is None else e["eval"].out)
+                 for e in ring], tag="metrics_flush")
+        for e in ring:
+            _record_round(e["m"])
+            hist.round_time_s.append(e["t"])
+            hist.util_proxy.append(hist.meta["util_proxy_const"])
+            if e["eval"] is not None:
+                _record_eval(e["rnd"], e["eval"].out)
+        ring.clear()
+
+    sync0 = dict(runtime_lib.SYNC_TRACES)
+    t_loop = time.time()
+    for rnd, key in round_keys:
+        t0 = time.time()
+        global_tr, m = sched.step(global_tr, rnd, key)
+        do_eval = rnd % cfg.eval_every == 0 or rnd == cfg.rounds - 1
+        if pipelined:
+            # eval reads global_tr *before* the next round's dispatch
+            # donates it (in-order device queue); the serve refresh's
+            # device ops are likewise enqueued pre-donation
+            ev = _eval_dispatch(frozen, global_tr, ccfg, class_emb,
+                                ev_pack, rt) if do_eval else None
+            if serve_store is not None:
+                serve_store.refresh_from_global(global_tr)
+            ring.append({"rnd": rnd, "m": m, "eval": ev,
+                         "t": time.time() - t0})
+            if cfg.metrics_flush_every and \
+                    len(ring) >= cfg.metrics_flush_every:
+                _flush_ring()
+                loop_syncs += 1
+        else:
+            # barrier: the serial parity oracle — this round's metrics
+            # and eval materialize before the next round dispatches
+            # (the pre-pipeline loop, now sync-counted)
+            runtime_lib.sync_count("round_barrier")
+            loop_syncs += 1
+            _record_round(m)
+            hist.round_time_s.append(time.time() - t0)
+            # measured footprint constant (Fig. 3) — deterministic, no
+            # synthetic wiggle
+            hist.util_proxy.append(hist.meta["util_proxy_const"])
+            if do_eval:
+                ev = _eval_dispatch(frozen, global_tr, ccfg, class_emb,
+                                    ev_pack, rt)
+                _record_eval(rnd, ev.result())
+            if serve_store is not None:
+                serve_store.refresh_from_global(global_tr)
+    _flush_ring()
+    hist.meta["loop_wall_s"] = time.time() - t_loop
+    hist.meta["sync_counts"] = {
+        k: v - sync0.get(k, 0)
+        for k, v in runtime_lib.SYNC_TRACES.items()
+        if v - sync0.get(k, 0)}
+    hist.meta["loop_syncs"] = int(loop_syncs)
+    hist.meta["syncs_per_round"] = loop_syncs / max(cfg.rounds, 1)
+    hist.meta["prepared_rounds"] = int(prepared)
+    if serve_store is not None:
+        hist.meta["serve_refreshes"] = int(
+            serve_store.stats().get("refreshes", 0))
     # refresh the compile ledger: a policy that lazily compiled a new
     # width bucket mid-run (async back-fill at a fresh width) must show
     # up in the reported counts

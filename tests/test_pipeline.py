@@ -1,0 +1,259 @@
+"""Pipelined round loop (PR 10): pipelined vs barrier parity, the
+host-sync trace counter, donation-hazard tracking, and the serve
+store's trainer->store refresh path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import runtime as runtime_lib
+from repro.fl import sched as sched_lib
+from repro.fl.simulator import FLConfig, run_federated
+
+# Mirrors the chaos acceptance config (tests/test_chaos.py): small
+# enough to run fast, faulty enough that the ledger is non-empty.
+_CHAOS = sched_lib.ChaosConfig(dropout_prob=0.5, straggler_sigma=0.5,
+                               uplink_loss_prob=0.5, max_retries=2)
+_BASE = dict(
+    dataset="pacs", strategy="fedclip", n_clients=5, rounds=4,
+    local_steps=2, n_per_class=12, batch_size=8, lr=3e-3,
+    trace="skewed", eval_every=2)
+
+_HIST_FIELDS = (
+    "rounds", "server_acc", "server_loss", "tail_acc", "client_loss",
+    "client_acc", "uplink_bytes", "participation", "staleness", "vtime",
+    "class_counts", "class_staleness", "class_acc", "util_proxy")
+
+
+def _kinds(h):
+    # clip_pretrain hits the process-global _CLIP_CACHE after the first
+    # run in a process, so it is excluded from cross-run comparison
+    # (same convention as tests/test_runtime.py).
+    return {k: v for k, v in h.meta["n_compiles_by_kind"].items()
+            if k != "clip_pretrain"}
+
+
+def _assert_hist_equal(hb, hp):
+    """Bitwise History equality (everything but wall-clock timings)."""
+    for f in _HIST_FIELDS:
+        assert getattr(hb, f) == getattr(hp, f), f
+    assert _kinds(hb) == _kinds(hp)
+
+
+# ---------------------------------------------------------------------
+# pipelined vs barrier parity, all three policies, under chaos
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,kw", [
+    ("full", {}),
+    ("sync-partial", {"clients_per_round": 2}),
+    ("async", {"clients_per_round": 2, "async_concurrency": 4}),
+])
+def test_pipelined_matches_barrier_under_chaos(policy, kw):
+    """The tentpole parity claim: pipelined mode defers materialization
+    but every History value — per-client metrics, eval accuracy, the
+    fault ledger, the per-device-class fairness columns — is bitwise
+    the barrier (serial oracle) one, for every policy, with faults
+    firing. Chaos entries attribute to the correct round even though
+    they materialize rounds later."""
+    cfg = dict(_BASE, participation=policy, chaos=_CHAOS, **kw)
+    hb = run_federated(FLConfig(**cfg, pipeline="barrier"))
+    hp = run_federated(FLConfig(**cfg, pipeline="pipelined"))
+    _assert_hist_equal(hb, hp)
+    assert hb.meta["fault_ledger"] == hp.meta["fault_ledger"]
+    assert hb.meta["device_class_report"] == \
+        hp.meta["device_class_report"]
+    assert sum(hb.meta["fault_ledger"].values()) > 0
+
+
+def test_pipelined_matches_barrier_fault_free_and_sync_free():
+    """Fault-free sync-partial: bitwise parity AND a completely
+    sync-free steady state — the pre-drawn selections plus deferred
+    metrics/eval leave zero host syncs inside the round loop (the one
+    counted flush happens after it)."""
+    cfg = dict(_BASE, participation="sync-partial", clients_per_round=2)
+    hb = run_federated(FLConfig(**cfg, pipeline="barrier"))
+    hp = run_federated(FLConfig(**cfg, pipeline="pipelined"))
+    _assert_hist_equal(hb, hp)
+    assert hb.meta["pipeline"] == "barrier"
+    assert hp.meta["pipeline"] == "pipelined"
+    # barrier syncs every round; pipelined never inside the loop
+    assert hb.meta["loop_syncs"] == _BASE["rounds"]
+    assert hb.meta["sync_counts"].get("round_barrier", 0) == \
+        _BASE["rounds"]
+    assert hp.meta["loop_syncs"] == 0
+    assert hp.meta["syncs_per_round"] == 0.0
+    assert hp.meta["sync_counts"].get("round_barrier", 0) == 0
+    # exactly one bulk flush materialized the whole run's metrics
+    assert hp.meta["sync_counts"].get("metrics_flush", 0) == 1
+    # every round's selection was pre-drawn
+    assert hp.meta["prepared_rounds"] == _BASE["rounds"]
+    assert hb.meta["prepared_rounds"] == 0
+
+
+def test_pipelined_periodic_flush_keeps_parity():
+    """metrics_flush_every=M materializes the ring mid-run (M counted
+    syncs) without changing any History value."""
+    cfg = dict(_BASE, participation="sync-partial", clients_per_round=2)
+    h0 = run_federated(FLConfig(**cfg, pipeline="pipelined"))
+    h2 = run_federated(FLConfig(**cfg, pipeline="pipelined",
+                                metrics_flush_every=2))
+    _assert_hist_equal(h0, h2)
+    assert h2.meta["loop_syncs"] == _BASE["rounds"] // 2
+
+
+def test_pipelined_sequential_engine_parity():
+    """The sequential reference executor runs under the pipelined loop
+    too (its internal syncs are its own business) and stays the cohort
+    engine's oracle."""
+    cfg = dict(_BASE, participation="sync-partial", clients_per_round=2)
+    hb = run_federated(FLConfig(**cfg, engine="sequential",
+                                pipeline="barrier"))
+    hp = run_federated(FLConfig(**cfg, engine="sequential",
+                                pipeline="pipelined"))
+    _assert_hist_equal(hb, hp)
+
+
+def test_unknown_pipeline_mode_raises():
+    with pytest.raises(ValueError, match="pipeline"):
+        run_federated(FLConfig(**_BASE, pipeline="turbo"))
+
+
+# ---------------------------------------------------------------------
+# runtime: sync traces, dependency-tracked handles, donation hazards
+# ---------------------------------------------------------------------
+
+def test_sync_traces_counter():
+    runtime_lib.reset_sync_traces()
+    rt = runtime_lib.ProgramRuntime()
+    h = rt.dispatch("dbl", lambda: (lambda a: a * 2), (jnp.ones(4),))
+    assert runtime_lib.SYNC_TRACES == {}
+    h.result()
+    assert runtime_lib.SYNC_TRACES["handle_wait"] == 1
+    assert runtime_lib.SYNC_TRACES["handle_wait:dbl"] == 1
+    h.result()          # idempotent: a materialized handle is free
+    assert runtime_lib.SYNC_TRACES["handle_wait"] == 1
+    rt.sync((jnp.zeros(2), np.zeros(2), 3), tag="bulk")
+    assert runtime_lib.SYNC_TRACES["bulk"] == 1
+    runtime_lib.reset_sync_traces()
+    assert runtime_lib.SYNC_TRACES == {}
+
+
+def test_handle_dependency_tracking():
+    rt = runtime_lib.ProgramRuntime()
+    h1 = rt.dispatch("a", lambda: (lambda x: x + 1), (jnp.zeros(3),))
+    h2 = rt.dispatch("b", lambda: (lambda x: x * 2), (h1,))
+    assert h2.deps == (h1,)
+    assert h2.kind == "b"
+    np.testing.assert_array_equal(np.asarray(h2.result()),
+                                  [2.0, 2.0, 2.0])
+
+
+def test_donation_hazard_blocks_reuse_until_materialized():
+    """The regression the tentpole demands: reusing a buffer donated to
+    an in-flight dispatch raises loudly; after the donating handle
+    materializes, the hazard is cleared (and JAX's own deleted-array
+    check takes over where donation really happened)."""
+    rt = runtime_lib.ProgramRuntime()
+    x = jnp.ones(8)
+    h = rt.dispatch("donor", lambda: (lambda a: a + 1), (x,),
+                    donate_argnums=(0,))
+    with pytest.raises(RuntimeError, match="donation hazard"):
+        rt.dispatch("reader", lambda: (lambda a: a * 2), (x,))
+    with pytest.raises(RuntimeError, match="donation hazard"):
+        rt.run("reader2", lambda: (lambda a: a * 3), (x,))
+    h.result()
+    assert h.done
+    # hazard cleared: a *fresh* buffer of the same shape flows freely
+    y = jnp.ones(8)
+    rt.run("reader", lambda: (lambda a: a * 2), (y,))
+
+
+def test_donation_hazard_ignores_unrelated_buffers():
+    rt = runtime_lib.ProgramRuntime()
+    x, y = jnp.ones(8), jnp.ones(8)
+    rt.dispatch("donor", lambda: (lambda a: a + 1), (x,),
+                donate_argnums=(0,))
+    out = rt.run("reader", lambda: (lambda a: a * 2), (y,))
+    np.testing.assert_array_equal(np.asarray(out), np.full(8, 2.0))
+
+
+# ---------------------------------------------------------------------
+# serve store refresh
+# ---------------------------------------------------------------------
+
+def _tiny_backing(n=3, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n)
+    return {i: {"w": jax.random.normal(ks[i], (64, 32)),
+                "b": jax.random.normal(ks[i], (32,))}
+            for i in range(n)}
+
+
+def test_store_refresh_matches_evict_and_refetch():
+    """A refreshed resident's slab rows are bitwise what an evicted
+    user would re-quantize to on its next fetch — refresh is a latency
+    event, never a correctness event."""
+    from repro.fl.serve.store import AdapterStore, take_rows
+    back = _tiny_backing()
+    store = AdapterStore(dict(back), max_entries=3, quant_bits=8)
+    for uid in back:
+        store.fetch(uid)
+    new0 = jax.tree.map(lambda l: l * 1.5, back[0])
+    n = store.refresh({0: new0})
+    assert n == 1
+    famk, slot = store.fetch(0)
+    rows = take_rows(store.family(famk)["slabs"], jnp.asarray([slot]))
+    # oracle: a cold store quantizing the new snapshot directly
+    cold = AdapterStore({0: new0}, max_entries=1, quant_bits=8)
+    cfamk, cslot = cold.fetch(0)
+    crows = take_rows(cold.family(cfamk)["slabs"],
+                      jnp.asarray([cslot]))
+    for a, b in zip(jax.tree.leaves(rows), jax.tree.leaves(crows)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # bookkeeping untouched, ledger charged
+    assert store.resident()[-1] == 0          # fetch moved 0 to MRU
+    assert store.stats()["refreshes"] == 1
+    assert store.stats()["refreshed_resident"] == 1
+
+
+def test_store_refresh_from_global_rebases():
+    """refresh_from_global preserves per-user personalization deltas:
+    new_i = old_i + (new_global - base)."""
+    from repro.fl.serve.store import AdapterStore
+    back = _tiny_backing()
+    store = AdapterStore(dict(back), max_entries=2, quant_bits=0)
+    g0 = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    assert store.refresh_from_global(g0) == 0     # snapshot only
+    g1 = jax.tree.map(lambda l: l + 0.25, g0)
+    n = store.refresh_from_global(g1)
+    assert n == 0                                  # nothing resident yet
+    for uid, old in back.items():
+        got = store.backing[uid]
+        want = jax.tree.map(lambda o: o + 0.25, old)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+    assert store.stats()["refreshes"] == len(back)
+
+
+def test_run_federated_refreshes_serve_store():
+    """The simulator's round loop drives the continuous trainer->store
+    refresh: every committed round rebases the backing, without
+    breaking pipelined parity."""
+    from repro.core import clip as clip_lib
+    from repro.fl import client as client_lib
+    from repro.fl.serve.store import AdapterStore
+    from repro.fl.strategies import STRATEGIES
+    ccfg = clip_lib.CLIPConfig()
+    strat = STRATEGIES["fedclip"]
+    back = {i: client_lib.init_trainable(jax.random.PRNGKey(100 + i),
+                                         ccfg, strat) for i in range(3)}
+    cfg = dict(_BASE, participation="sync-partial", clients_per_round=2,
+               rounds=3)
+    store = AdapterStore(dict(back), max_entries=2, quant_bits=0)
+    h = run_federated(FLConfig(**cfg, pipeline="pipelined"),
+                      serve_store=store)
+    # first round snapshots, the remaining rounds refresh every uid
+    assert h.meta["serve_refreshes"] == (cfg["rounds"] - 1) * len(back)
+    href = run_federated(FLConfig(**cfg, pipeline="pipelined"))
+    _assert_hist_equal(href, h)
